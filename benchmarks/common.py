@@ -1,0 +1,59 @@
+"""Shared benchmark runner: scaled-down (CPU-tractable) federation runs with
+on-disk caching so the per-figure benchmarks compose without re-running.
+
+Scale note (DESIGN.md §8): the paper runs K=100 vehicles for 300-4000 epochs;
+one full-scale MNIST round is ~60 s on this container's single CPU core, so
+the default benchmark scale is K=24 vehicles / 40-80 epochs / E=4 / B=32.
+The paper-scale settings remain available via --full flags.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+
+import numpy as np
+
+from repro.data.synthetic import synthetic_cifar10, synthetic_mnist
+from repro.fed.simulator import SimulationConfig, SimulationResult, run_simulation
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "results/bench_cache")
+
+# scaled-down defaults (see module docstring)
+SCALE = dict(num_vehicles=12, local_steps=4, batch_size=32, eval_every=10,
+             p1_steps=60, eval_samples=600)
+EPOCHS = {"mnist": 30, "cifar10": 16}
+
+_DATASETS: dict[str, object] = {}
+
+
+def dataset(name: str):
+    if name not in _DATASETS:
+        if "mnist" in name:
+            _DATASETS[name] = synthetic_mnist(n_train=12_000, n_test=1_500)
+        else:
+            _DATASETS[name] = synthetic_cifar10(n_train=12_000, n_test=1_500)
+    return _DATASETS[name]
+
+
+def run_or_load(progress: bool = False, **cfg_kwargs) -> SimulationResult:
+    params = dict(SCALE)
+    params.update(cfg_kwargs)
+    params.setdefault("epochs", EPOCHS.get(params.get("dataset", "mnist"), 60))
+    key = hashlib.sha1(json.dumps(params, sort_keys=True).encode()).hexdigest()[:16]
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"sim_{key}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    cfg = SimulationConfig(**params)
+    res = run_simulation(cfg, dataset=dataset(cfg.dataset), progress=progress)
+    res.config = None  # SimulationConfig holds a callable; drop before pickling
+    with open(path, "wb") as f:
+        pickle.dump(res, f)
+    return res
+
+
+def csv_row(*fields) -> str:
+    return ",".join(str(f) for f in fields)

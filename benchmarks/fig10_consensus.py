@@ -1,0 +1,30 @@
+"""Paper Fig. 10: consensus distance Xi_t^2 over the early epochs, DFL-DDS vs
+DFL (lower = faster agreement between vehicle models)."""
+from __future__ import annotations
+
+from .common import csv_row, run_or_load
+
+
+def main() -> list[str]:
+    rows = [csv_row("figure", "case", "algorithm", "epoch", "consensus_distance")]
+    cases = [("mnist", "balanced_noniid"), ("cifar10", "unbalanced_iid")]
+    for ds, dist in cases:
+        finals = {}
+        for algo in ("dds", "dfl"):
+            # kwargs match fig9 (mnist) / fig7 (cifar) exactly so the cached
+            # runs are reused (run_or_load keys on the raw kwargs)
+            kwargs = {"algorithm": algo, "dataset": ds}
+            if dist != "balanced_noniid":
+                kwargs["distribution"] = dist
+            res = run_or_load(**kwargs)
+            for e, c in zip(res.epochs_evaluated, res.consensus_distance):
+                rows.append(csv_row("fig10", f"{ds}/{dist}", algo, e, f"{c:.5f}"))
+            finals[algo] = sum(res.consensus_distance) / len(res.consensus_distance)
+        rows.append(csv_row("fig10", f"{ds}/{dist}", "MEAN",
+                            f"dds={finals['dds']:.5f}", f"dfl={finals['dfl']:.5f}",
+                            "dds_lower", int(finals["dds"] <= finals["dfl"] * 1.1)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,25 @@
+"""Paper Figs. 6-7: average accuracy curves on CIFAR-10, DFL-DDS vs DFL vs SP,
+under Balanced&non-IID (Fig. 6) and Unbalanced&IID (Fig. 7), grid network."""
+from __future__ import annotations
+
+from .common import csv_row, run_or_load
+
+
+def main() -> list[str]:
+    rows = [csv_row("figure", "distribution", "algorithm", "epoch", "avg_accuracy")]
+    for fig, dist in (("fig6", "balanced_noniid"), ("fig7", "unbalanced_iid")):
+        finals = {}
+        for algo in ("dds", "dfl", "sp"):
+            res = run_or_load(algorithm=algo, dataset="cifar10",
+                              distribution=dist)
+            for e, a in zip(res.epochs_evaluated, res.avg_accuracy):
+                rows.append(csv_row(fig, dist, algo, e, f"{a:.4f}"))
+            finals[algo] = res.avg_accuracy[-1]
+        rows.append(csv_row(fig, dist, "ORDERING",
+                            "dds>=dfl", int(finals["dds"] >= finals["dfl"] - 0.02),
+                            "dds>=sp", int(finals["dds"] >= finals["sp"] - 0.02)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,24 @@
+"""Paper Fig. 8: average accuracy on MNIST under grid / random / spider road
+networks, DFL-DDS vs DFL vs SP (Balanced & non-IID)."""
+from __future__ import annotations
+
+from .common import csv_row, run_or_load
+
+
+def main() -> list[str]:
+    rows = [csv_row("figure", "topology", "algorithm", "epoch", "avg_accuracy")]
+    for net in ("grid", "random", "spider"):
+        finals = {}
+        for algo in ("dds", "dfl", "sp"):
+            res = run_or_load(algorithm=algo, dataset="mnist", road_net=net)
+            for e, a in zip(res.epochs_evaluated, res.avg_accuracy):
+                rows.append(csv_row("fig8", net, algo, e, f"{a:.4f}"))
+            finals[algo] = res.avg_accuracy[-1]
+        rows.append(csv_row("fig8", net, "ORDERING",
+                            "dds>=dfl", int(finals["dds"] >= finals["dfl"] - 0.02),
+                            "dds>=sp", int(finals["dds"] >= finals["sp"] - 0.02)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

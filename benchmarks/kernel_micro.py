@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks (beyond-paper): us_per_call for the three Pallas
+kernels' jnp reference paths on CPU + interpret-mode validation overhead.
+
+On-TPU numbers come from the same harness with interpret=False on a real
+device; here the CSV records the CPU reference timing and derived bandwidth.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_ref
+from repro.kernels.gossip_mix import gossip_mix_matmul_ref
+from repro.kernels.kl_simplex import kl_rows_ref
+
+from .common import csv_row
+
+
+def _time(fn, *args, iters=10) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main() -> list[str]:
+    rows = [csv_row("name", "us_per_call", "derived")]
+    r = np.random.default_rng(0)
+
+    k, p = 64, 1 << 20
+    w = jnp.asarray(r.dirichlet(np.ones(k), size=k), jnp.float32)
+    x = jnp.asarray(r.normal(size=(k, p)), jnp.float32)
+    f = jax.jit(gossip_mix_matmul_ref)
+    us = _time(f, w, x)
+    gbps = (2 * k * p * 4) / (us / 1e6) / 1e9
+    rows.append(csv_row("gossip_mix_ref_64x1M", f"{us:.1f}", f"{gbps:.1f}GB/s_eff"))
+
+    v, kk = 512, 512
+    s = jnp.asarray(r.dirichlet(np.ones(kk), size=v), jnp.float32)
+    g = jnp.asarray(r.dirichlet(np.ones(kk)), jnp.float32)
+    f = jax.jit(kl_rows_ref)
+    us = _time(f, s, g)
+    rows.append(csv_row("kl_rows_ref_512x512", f"{us:.1f}",
+                        f"{v * kk / us:.0f}elem_per_us"))
+
+    b, sq, h, hd = 1, 1024, 8, 64
+    q = jnp.asarray(r.normal(size=(b, sq, h, hd)), jnp.float32)
+    kv = jnp.asarray(r.normal(size=(b, sq, h, hd)), jnp.float32)
+    f = jax.jit(lambda a, c, d: flash_attention_ref(a, c, d, causal=True))
+    us = _time(f, q, kv, kv, iters=3)
+    flops = 4 * b * h * sq * sq * hd / 2  # causal half
+    rows.append(csv_row("attention_ref_1k_8h", f"{us:.1f}",
+                        f"{flops / (us / 1e6) / 1e9:.1f}GFLOPs_eff"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,32 @@
+"""Roofline table benchmark: reads the dry-run JSONL artifacts and emits the
+three-term roofline CSV (one row per arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import os
+
+from repro.roofline.analysis import load_rows
+
+from .common import csv_row
+
+RESULT_GLOB = os.environ.get("REPRO_DRYRUN_GLOB", "results/dryrun_*.jsonl")
+
+
+def main() -> list[str]:
+    paths = sorted(glob.glob(RESULT_GLOB))
+    rows = [csv_row("arch", "shape", "mesh", "compute_s", "memory_s",
+                    "collective_s", "dominant", "useful_ratio")]
+    if not paths:
+        rows.append(csv_row("(no dry-run artifacts found — run "
+                            "python -m repro.launch.dryrun --all first)",
+                            "", "", "", "", "", "", ""))
+        return rows
+    for r in load_rows(paths):
+        rows.append(csv_row(r.arch, r.shape, r.mesh, f"{r.compute_s:.3e}",
+                            f"{r.memory_s:.3e}", f"{r.collective_s:.3e}",
+                            r.dominant, f"{r.useful_ratio:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,46 @@
+"""Benchmark orchestrator: one module per paper figure/table + the roofline
+and kernel microbenchmarks. Prints CSV blocks per benchmark.
+
+  PYTHONPATH=src python -m benchmarks.run               # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig8_mnist kernel_micro
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (fig2_cdf, fig3_correlation, fig6_7_cifar, fig8_mnist,
+               fig9_epochs_to_target, fig10_consensus, kernel_micro,
+               roofline_table)
+
+BENCHMARKS = {
+    "fig2_cdf": fig2_cdf.main,
+    "fig3_correlation": fig3_correlation.main,
+    "fig8_mnist": fig8_mnist.main,
+    "fig9_epochs_to_target": fig9_epochs_to_target.main,
+    "fig6_7_cifar": fig6_7_cifar.main,
+    "fig10_consensus": fig10_consensus.main,
+    "kernel_micro": kernel_micro.main,
+    "roofline_table": roofline_table.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=sorted(BENCHMARKS), default=None)
+    args = ap.parse_args()
+    names = args.only or list(BENCHMARKS)
+    for name in names:
+        t0 = time.time()
+        print(f"### {name}", flush=True)
+        try:
+            for row in BENCHMARKS[name]():
+                print(row, flush=True)
+            print(f"### {name} done in {time.time() - t0:.1f}s\n", flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            print(f"### {name} FAILED: {type(e).__name__}: {e}\n", flush=True)
+            raise
+
+
+if __name__ == "__main__":
+    main()

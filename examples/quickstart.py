@@ -1,0 +1,39 @@
+"""Quickstart: DFL-DDS in ~40 lines.
+
+Ten vehicles drive a grid road network; each holds a non-IID shard of
+(synthetic) MNIST; every global epoch they exchange models with whoever is
+in radio range, choose aggregation weights by minimizing the KL divergence
+of their state vectors (the paper's P1), and take local SGD steps.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.data.synthetic import synthetic_mnist
+from repro.fed.simulator import SimulationConfig, run_simulation
+
+cfg = SimulationConfig(
+    algorithm="dds",          # the paper's algorithm ("dfl" / "sp" = baselines)
+    road_net="grid",
+    num_vehicles=10,
+    epochs=30,
+    local_steps=4,            # E
+    batch_size=32,            # B
+    lr=0.15,
+    eval_every=10,
+    eval_samples=500,
+    p1_steps=80,              # EG iterations for the convex problem P1
+    seed=0,
+)
+
+dataset = synthetic_mnist(n_train=6_000, n_test=1_000)
+result = run_simulation(cfg, dataset=dataset, progress=True)
+
+print("\nepoch history:", result.epochs_evaluated)
+print("avg accuracy :", [round(a, 3) for a in result.avg_accuracy])
+print("state-vector entropy (diversity) first->last: "
+      f"{result.entropy[0].mean():.3f} -> {result.entropy[-1].mean():.3f} bits")
+print(f"final average accuracy over {cfg.num_vehicles} vehicles: "
+      f"{result.final_accuracy():.3f}")

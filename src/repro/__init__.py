@@ -1,0 +1,3 @@
+"""repro: DFL-DDS (decentralized FL with diversified data sources) as a
+production-grade multi-pod JAX framework. See DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,125 @@
+"""Pytree checkpointing (npz-based; no orbax in the container).
+
+Saves arbitrary pytrees of arrays (model params, optimizer state, federation
+state) with structure captured via flattened key paths. Atomic via
+write-to-temp + rename. Supports step-numbered checkpoints with retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: PyTree, metadata: dict | None = None) -> None:
+    """Save a pytree to ``path`` (.npz appended if missing). Atomic."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    payload = dict(flat)
+    payload["__treedef__"] = np.frombuffer(
+        json.dumps(jax.tree_util.tree_structure(tree), default=str).encode(), dtype=np.uint8)
+    if metadata:
+        payload["__meta__"] = np.frombuffer(json.dumps(metadata).encode(), dtype=np.uint8)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as data:
+        flat_like = _flatten(like)
+        out = {}
+        for key, ref in flat_like.items():
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if arr.shape != ref.shape:
+                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {ref.shape}")
+            out[key] = arr
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    new_leaves = [out[k].astype(np.asarray(l).dtype) for k, l in zip(keys, leaves_like)]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def metadata(path: str) -> dict:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as data:
+        if "__meta__" not in data:
+            return {}
+        return json.loads(bytes(data["__meta__"].tobytes()).decode())
+
+
+class CheckpointManager:
+    """Step-numbered checkpoints with retention: <dir>/ckpt_<step>.npz."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _steps(self) -> list[int]:
+        steps = []
+        for f in os.listdir(self.directory):
+            m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
+            if m:
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def save(self, step: int, tree: PyTree, metadata: dict | None = None) -> str:
+        meta = dict(metadata or {})
+        meta["step"] = step
+        path = os.path.join(self.directory, f"ckpt_{step}.npz")
+        save(path, tree, meta)
+        for old in self._steps()[: -self.keep] if self.keep else []:
+            os.unlink(os.path.join(self.directory, f"ckpt_{old}.npz"))
+        return path
+
+    def latest_step(self) -> int | None:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def restore_latest(self, like: PyTree) -> tuple[PyTree, int] | None:
+        step = self.latest_step()
+        if step is None:
+            return None
+        return restore(os.path.join(self.directory, f"ckpt_{step}.npz"), like), step

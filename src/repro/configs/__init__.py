@@ -1,0 +1,7 @@
+from .base import ArchConfig
+from .registry import ALL_CONFIGS, ARCHITECTURES, PAPER_MODELS, assigned_architectures, get_config
+
+__all__ = [
+    "ArchConfig", "ALL_CONFIGS", "ARCHITECTURES", "PAPER_MODELS",
+    "assigned_architectures", "get_config",
+]

@@ -1,0 +1,10 @@
+"""Core DFL-DDS library: the paper's contribution as composable JAX modules."""
+from . import aggregation, baselines, dfl_dds, kl_solver, state_vector
+from .dfl_dds import FederationState, dds_round, init_federation
+from .baselines import PushSumState, dfl_round, init_push_sum, sp_model, sp_round
+
+__all__ = [
+    "aggregation", "baselines", "dfl_dds", "kl_solver", "state_vector",
+    "FederationState", "dds_round", "init_federation",
+    "PushSumState", "dfl_round", "init_push_sum", "sp_model", "sp_round",
+]

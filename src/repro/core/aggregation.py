@@ -1,0 +1,101 @@
+"""Model aggregation for decentralized FL: mixing matrices and the gossip mix.
+
+One synchronized round of decentralized aggregation (Eq. 10 executed on every
+vehicle) is, in stacked form,
+
+    w_{t+1} = W_t @ w_t
+
+with ``W_t`` the ``[K, K]`` row-stochastic matrix of aggregation weights
+(supported on the time-t contact graph). On TPU this is a batched GEMM over
+the vehicle axis — the TPU-native equivalent of V2V point-to-point exchange.
+
+``mix_params`` applies W to an arbitrary parameter pytree whose leaves carry a
+leading vehicle axis. The hot path can be served by the Pallas ``gossip_mix``
+kernel (see repro.kernels.gossip_mix); the pure-jnp einsum below is the
+reference and the default on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def mixing_from_alpha(alpha: Array, contact_matrix: Array) -> Array:
+    """Mask + renormalize alpha rows onto the contact set -> row-stochastic W."""
+    w = alpha * contact_matrix
+    return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
+
+
+def uniform_mixing(contact_matrix: Array) -> Array:
+    """W[k, k'] = 1/|P_k| on the contact set (incl. self)."""
+    c = contact_matrix.astype(jnp.float32)
+    return c / jnp.maximum(jnp.sum(c, axis=-1, keepdims=True), 1e-12)
+
+
+def metropolis_mixing(contact_matrix: Array) -> Array:
+    """Metropolis-Hastings weights: symmetric, doubly-stochastic on undirected
+    graphs — a classic gossip baseline (beyond-paper reference point)."""
+    c = contact_matrix.astype(jnp.float32)
+    deg = jnp.sum(c, axis=-1) - 1.0  # exclude self
+    off = c * (1.0 / (1.0 + jnp.maximum(deg[:, None], deg[None, :])))
+    off = off * (1.0 - jnp.eye(c.shape[0]))
+    diag = 1.0 - jnp.sum(off, axis=-1)
+    return off + jnp.diag(diag)
+
+
+def sample_size_mixing(contact_matrix: Array, sample_counts: Array) -> Array:
+    """Decentralized-FedAvg weights [6]: proportional to neighbour sample counts."""
+    c = contact_matrix.astype(jnp.float32)
+    w = c * jnp.asarray(sample_counts, jnp.float32)[None, :]
+    return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
+
+
+def mix_params(mixing: Array, params):
+    """Apply the gossip mix to a pytree with leading vehicle axis K.
+
+    Every leaf ``x`` of shape ``[K, ...]`` becomes the contraction
+    ``W[k, j] * x[j, ...]`` over the vehicle axis — via tensordot, NOT via a
+    flatten-to-[K, P] reshape: reshaping a tensor-parallel-sharded leaf to
+    [K, P] destroys its sharding and makes XLA all-gather the full weight
+    before the mix (measured: +60 GB/device collective on mixtral train_4k).
+    tensordot keeps the trailing dims (and their shardings) intact, so the
+    only communication is the unavoidable vehicle-axis exchange of each
+    device's own shard. Mixing is f32, cast back to the leaf dtype.
+    """
+
+    def mix_leaf(x: Array) -> Array:
+        mixed = jnp.tensordot(mixing.astype(jnp.float32), x.astype(jnp.float32),
+                              axes=([1], [0]),
+                              precision=jax.lax.Precision.HIGHEST)
+        return mixed.astype(x.dtype)
+
+    return jax.tree_util.tree_map(mix_leaf, params)
+
+
+def mix_params_lowp(mixing: Array, params):
+    """Gossip mix with a bfloat16 exchange payload (beyond-paper perf
+    variant): the cross-vehicle all-gather moves bf16, accumulation stays
+    f32 on the MXU. Halves the gossip collective bytes at <1e-2 relative
+    mixing error (weights are a convex combination, so no cancellation)."""
+
+    def mix_leaf(x: Array) -> Array:
+        mixed = jnp.tensordot(mixing.astype(jnp.bfloat16), x.astype(jnp.bfloat16),
+                              axes=([1], [0]),
+                              preferred_element_type=jnp.float32)
+        return mixed.astype(x.dtype)
+
+    return jax.tree_util.tree_map(mix_leaf, params)
+
+
+def consensus_distance(params) -> Array:
+    """Xi_t^2 = (1/K) sum_k || w_bar - w_k ||^2 over a stacked pytree."""
+    leaves = jax.tree_util.tree_leaves(params)
+    k = leaves[0].shape[0]
+    total = 0.0
+    for leaf in leaves:
+        flat = leaf.reshape(k, -1).astype(jnp.float32)
+        mean = jnp.mean(flat, axis=0, keepdims=True)
+        total = total + jnp.sum((flat - mean) ** 2)
+    return total / k

@@ -1,0 +1,153 @@
+"""Baselines the paper compares against.
+
+* ``dfl_round`` — decentralized FedAvg [6]: aggregation weights proportional
+  to neighbour sample counts; E local iterations per global epoch (same loop
+  structure as DFL-DDS, different mixing matrix).
+* ``sp_round`` — subgradient-push (SP) [5], per the paper's implementation
+  description (Sec. IV-B): each vehicle keeps (x_k, y_k), broadcasts
+  x_k/p_k and y_k/p_k to every member of P_{k,t}, performs ONE local
+  iteration per global epoch on z_k = x_k / y_k with the FULL local dataset.
+
+State vectors are also tracked for the baselines (they do not influence the
+baselines' aggregation — they are needed to reproduce the paper's diversity
+measurements, Figs. 2-3).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import aggregation, state_vector
+from .dfl_dds import FederationState, LocalTrainFn
+
+Array = jax.Array
+PyTree = Any
+
+
+def dfl_round(
+    fed: FederationState,
+    contact_matrix: Array,
+    target: Array,
+    batches: PyTree,
+    rng: Array,
+    local_train_fn: LocalTrainFn,
+    *,
+    sample_counts: Array,
+    lr: float | Array,
+    local_steps: int,
+    mix_params_fn: Callable[[Array, PyTree], PyTree] = aggregation.mix_params,
+    local_mask: Array | None = None,
+) -> tuple[FederationState, dict[str, Array]]:
+    """Decentralized FedAvg: alpha proportional to sample population [6].
+
+    ``local_mask`` [K]: participants that run local iterations (RSUs carry 0).
+    """
+    k = fed.state_matrix.shape[0]
+    mixing = aggregation.sample_size_mixing(contact_matrix, sample_counts)
+
+    params = mix_params_fn(mixing, fed.params)
+    rngs = jax.random.split(rng, k)
+    new_params, opt_state, metrics = jax.vmap(local_train_fn)(
+        params, fed.opt_state, batches, rngs)
+    if local_mask is not None:
+        keep = lambda new, old: jax.tree_util.tree_map(
+            lambda n, o: jnp.where(
+                local_mask.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o),
+            new, old)
+        params = keep(new_params, params)
+        opt_state = keep(opt_state, fed.opt_state)
+    else:
+        params = new_params
+
+    state = state_vector.aggregate(fed.state_matrix, mixing)
+    state = state_vector.local_update(state, lr, local_steps, update_mask=local_mask)
+
+    out = FederationState(params, opt_state, state, fed.epoch + 1)
+    diags = {
+        "kl_divergence": state_vector.kl_to_target(state, target),
+        "entropy": state_vector.entropy(state),
+        "mixing": mixing,
+        **metrics,
+    }
+    return out, diags
+
+
+class PushSumState(NamedTuple):
+    x: PyTree             # stacked [K, ...] push-sum numerators
+    y: Array              # [K] push-sum denominators
+    state_matrix: Array   # [K, K]
+    epoch: Array
+
+
+def init_push_sum(params_stack: PyTree, num_vehicles: int) -> PushSumState:
+    return PushSumState(
+        x=params_stack,
+        y=jnp.ones((num_vehicles,), jnp.float32),
+        state_matrix=state_vector.init_state(num_vehicles),
+        epoch=jnp.zeros((), jnp.int32),
+    )
+
+
+def push_sum_mixing(contact_matrix: Array) -> Array:
+    """Column-stochastic mix B[k, k'] = 1/p_{k'} if k in P_{k'} (incl. self).
+
+    With undirected contacts, membership is symmetric: k in P_{k'} iff
+    C[k, k'] = 1. Each *column* k' sums to 1 (the sender splits its mass
+    evenly over its out-neighbourhood) — the defining property of push-sum.
+    """
+    c = contact_matrix.astype(jnp.float32)
+    p = jnp.sum(c, axis=-1)  # |P_{k'}| by symmetry
+    return c / jnp.maximum(p[None, :], 1e-12)
+
+
+def sp_round(
+    ps: PushSumState,
+    contact_matrix: Array,
+    target: Array,
+    full_batches: PyTree,
+    rng: Array,
+    grad_fn: Callable[[PyTree, PyTree, Array], tuple[PyTree, PyTree]],
+    *,
+    lr: float | Array,
+    mix_params_fn: Callable[[Array, PyTree], PyTree] = aggregation.mix_params,
+) -> tuple[PushSumState, dict[str, Array]]:
+    """One subgradient-push global iteration.
+
+    ``grad_fn(params_k, batch_k, rng_k) -> (grads_k, metrics_k)`` computes the
+    full-batch subgradient at the de-biased model z = x/y for ONE vehicle.
+    """
+    k = ps.y.shape[0]
+    mixing = push_sum_mixing(contact_matrix)
+
+    # push step: x <- B x, y <- B y
+    x = mix_params_fn(mixing, ps.x)
+    y = mixing @ ps.y
+
+    # de-biased model and one subgradient step on x
+    z = jax.tree_util.tree_map(lambda leaf: leaf / y.reshape((-1,) + (1,) * (leaf.ndim - 1)), x)
+    rngs = jax.random.split(rng, k)
+    grads, metrics = jax.vmap(grad_fn)(z, full_batches, rngs)
+    lr_ = jnp.asarray(lr, jnp.float32)
+    x = jax.tree_util.tree_map(lambda xl, gl: xl - lr_ * gl.astype(xl.dtype), x, grads)
+
+    # state vectors: SP mixes with B then bumps once (one local iteration)
+    state = state_vector.aggregate(ps.state_matrix, mixing)
+    state = state_vector.local_update(state, lr_, 1)
+
+    out = PushSumState(x, y, state, ps.epoch + 1)
+    diags = {
+        "kl_divergence": state_vector.kl_to_target(state, target),
+        "entropy": state_vector.entropy(state),
+        "push_weights": y,
+        **metrics,
+    }
+    return out, diags
+
+
+def sp_model(ps: PushSumState) -> PyTree:
+    """The models SP evaluates: z_k = x_k / y_k."""
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf / ps.y.reshape((-1,) + (1,) * (leaf.ndim - 1)), ps.x
+    )

@@ -1,0 +1,103 @@
+"""DFL-DDS: one synchronized global iteration (Alg. 1 of the paper).
+
+The round is expressed over *stacked* federation state (leading vehicle axis
+K) so it jits once and shards over the mesh ``data``/``vehicle`` axis:
+
+  1. exchange models + state vectors        (implicit: stacked arrays)
+  2. solve P1 -> aggregation weights alpha  (kl_solver.solve_p1_all)
+  3. aggregate models  w <- W @ w           (aggregation.mix_params)
+  4. E local iterations per vehicle         (user-supplied local_train_fn, vmapped)
+  5. aggregate state vectors S <- W @ S     (state_vector.aggregate)
+  6. local state bump + normalize           (state_vector.local_update)
+
+``local_train_fn(params_k, opt_state_k, batch_k, rng_k) -> (params, opt, metrics)``
+performs the E local updates for ONE vehicle; the round vmaps it.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import aggregation, kl_solver, state_vector
+
+Array = jax.Array
+PyTree = Any
+LocalTrainFn = Callable[[PyTree, PyTree, PyTree, Array], tuple[PyTree, PyTree, PyTree]]
+
+
+class FederationState(NamedTuple):
+    params: PyTree        # stacked [K, ...]
+    opt_state: PyTree     # stacked [K, ...]
+    state_matrix: Array   # [K, K] state vectors (row k = s_k)
+    epoch: Array          # scalar int32
+
+
+def init_federation(params_stack: PyTree, opt_state_stack: PyTree, num_vehicles: int) -> FederationState:
+    return FederationState(
+        params=params_stack,
+        opt_state=opt_state_stack,
+        state_matrix=state_vector.init_state(num_vehicles),
+        epoch=jnp.zeros((), jnp.int32),
+    )
+
+
+def dds_round(
+    fed: FederationState,
+    contact_matrix: Array,
+    target: Array,
+    batches: PyTree,
+    rng: Array,
+    local_train_fn: LocalTrainFn,
+    *,
+    lr: float | Array,
+    local_steps: int,
+    p1_steps: int = 200,
+    p1_step_size: float = 0.5,
+    mix_params_fn: Callable[[Array, PyTree], PyTree] = aggregation.mix_params,
+    local_mask: Array | None = None,
+) -> tuple[FederationState, dict[str, Array]]:
+    """One DFL-DDS global iteration for the whole federation.
+
+    ``local_mask`` [K] marks participants that run local iterations; RSUs
+    (paper Sec. V-C — static, data-less relays) carry 0 and only mix.
+    """
+    k = fed.state_matrix.shape[0]
+
+    # -- steps 1-2: alpha from P1 on the exchanged state vectors ------------
+    mixing = kl_solver.solve_p1_all(
+        fed.state_matrix, target, contact_matrix,
+        num_steps=p1_steps, step_size=p1_step_size,
+    )
+    mixing = aggregation.mixing_from_alpha(mixing, contact_matrix)
+
+    # -- step 3: aggregate models -------------------------------------------
+    params = mix_params_fn(mixing, fed.params)
+
+    # -- step 4: E local iterations per vehicle -----------------------------
+    rngs = jax.random.split(rng, k)
+    new_params, opt_state, metrics = jax.vmap(local_train_fn)(
+        params, fed.opt_state, batches, rngs)
+    if local_mask is not None:
+        keep = lambda new, old: jax.tree_util.tree_map(
+            lambda n, o: jnp.where(
+                local_mask.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o),
+            new, old)
+        params = keep(new_params, params)
+        opt_state = keep(opt_state, fed.opt_state)
+    else:
+        params = new_params
+
+    # -- steps 5-6: state-vector aggregation + local bump -------------------
+    state = state_vector.aggregate(fed.state_matrix, mixing)
+    state = state_vector.local_update(state, lr, local_steps, update_mask=local_mask)
+
+    out = FederationState(params, opt_state, state, fed.epoch + 1)
+    diags = {
+        "kl_divergence": state_vector.kl_to_target(state, target),
+        "entropy": state_vector.entropy(state),
+        "mixing": mixing,
+        **metrics,
+    }
+    return out, diags

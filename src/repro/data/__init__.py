@@ -1,0 +1,9 @@
+from .datasets import load_cifar10, load_dataset, load_mnist
+from .pipeline import FederatedData, make_federated_data, sample_batches, sample_full_batches
+from .synthetic import Dataset, synthetic_cifar10, synthetic_mnist
+
+__all__ = [
+    "Dataset", "load_dataset", "load_mnist", "load_cifar10",
+    "synthetic_mnist", "synthetic_cifar10",
+    "FederatedData", "make_federated_data", "sample_batches", "sample_full_batches",
+]

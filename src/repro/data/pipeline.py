@@ -1,0 +1,55 @@
+"""Batching pipeline for federated training.
+
+Everything stays on-device: the full train set lives as a device array; each
+global epoch the pipeline draws per-vehicle (E local steps x B) sample
+indices from the vehicle's partition (dense [K, W] index table with true
+counts, see partition.pad_to_uniform) and gathers inside jit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class FederatedData(NamedTuple):
+    x: Array            # [N, ...] full train inputs (device)
+    y: Array            # [N] labels
+    index_table: Array  # [K, W] per-vehicle sample indices (padded, resampled)
+    counts: Array       # [K] true per-vehicle sample counts
+
+
+def make_federated_data(train_x: np.ndarray, train_y: np.ndarray,
+                        dense_indices: np.ndarray, counts: np.ndarray) -> FederatedData:
+    return FederatedData(
+        x=jnp.asarray(train_x),
+        y=jnp.asarray(train_y),
+        index_table=jnp.asarray(dense_indices),
+        counts=jnp.asarray(counts),
+    )
+
+
+@partial(jax.jit, static_argnames=("local_steps", "batch_size"))
+def sample_batches(data: FederatedData, rng: Array, local_steps: int, batch_size: int):
+    """Draw per-vehicle minibatches: returns (x, y) of shape [K, E, B, ...]."""
+    k, w = data.index_table.shape
+    picks = jax.random.randint(rng, (k, local_steps, batch_size), 0, w)
+    idx = data.index_table[jnp.arange(k)[:, None, None], picks]  # [K, E, B]
+    return data.x[idx], data.y[idx]
+
+
+@partial(jax.jit, static_argnames=("batch_size",))
+def sample_full_batches(data: FederatedData, rng: Array, batch_size: int):
+    """One batch per vehicle of ``batch_size`` samples drawn from its
+    partition — used by SP's single full-set local iteration (the paper's SP
+    uses all local samples; we draw ``batch_size`` >= typical partition size,
+    with self-resampling padding preserving the distribution)."""
+    k, w = data.index_table.shape
+    picks = jax.random.randint(rng, (k, batch_size), 0, w)
+    idx = jnp.take_along_axis(data.index_table, picks, axis=-1)
+    return data.x[idx], data.y[idx]

@@ -1,0 +1,11 @@
+from . import metrics, mobility, partition, simulator, topology
+from .mobility import ManhattanMobility, MobilityConfig, contact_schedule
+from .simulator import SimulationConfig, SimulationResult, run_simulation
+from .topology import RoadNetwork, contact_matrix, make_road_network
+
+__all__ = [
+    "metrics", "mobility", "partition", "simulator", "topology",
+    "ManhattanMobility", "MobilityConfig", "contact_schedule",
+    "SimulationConfig", "SimulationResult", "run_simulation",
+    "RoadNetwork", "contact_matrix", "make_road_network",
+]

@@ -1,0 +1,51 @@
+"""Paper extensions implemented as first-class features.
+
+* RSUs (paper Sec. V-C): road-side units are static participants that hold
+  no data — they maintain state vectors and relay aggregated models, giving
+  poorly-connected vehicles more mixing opportunities. An RSU never runs
+  local iterations (Eq. 5 must not bump a data-less participant), and the
+  target vector g gives it zero weight (n_rsu = 0).
+
+* Unreliable communication (paper Sec. VII future work): V2V exchanges fail
+  independently with probability p_drop; a failed exchange removes BOTH
+  directions of the contact edge for that round (the paper's synchronous
+  model exchanges are bidirectional). Self-loops never fail.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .topology import RoadNetwork, contact_matrix
+
+
+def place_rsus(net: RoadNetwork, num_rsus: int, seed: int = 0) -> np.ndarray:
+    """RSU positions at the highest-degree junctions (deterministic given the
+    network; ties broken by node index)."""
+    deg = net.degrees()
+    order = np.lexsort((np.arange(net.num_nodes), -deg))
+    return net.positions[order[:num_rsus]].copy()
+
+
+def contacts_with_rsus(vehicle_positions: np.ndarray, rsu_positions: np.ndarray,
+                       comm_range: float = 100.0) -> np.ndarray:
+    """[K+R, K+R] contact matrix over vehicles followed by RSUs."""
+    pos = np.concatenate([vehicle_positions, rsu_positions], axis=0)
+    return contact_matrix(pos, comm_range)
+
+
+def rsu_local_step_mask(num_vehicles: int, num_rsus: int) -> np.ndarray:
+    """[K+R] — 1 for participants that run local iterations (vehicles only)."""
+    return np.concatenate([np.ones(num_vehicles), np.zeros(num_rsus)]).astype(np.float32)
+
+
+def drop_contacts(contacts: np.ndarray, p_drop: float, rng: np.random.Generator) -> np.ndarray:
+    """Symmetric Bernoulli edge dropping; self-loops survive."""
+    if p_drop <= 0:
+        return contacts
+    k = contacts.shape[0]
+    keep = rng.random((k, k)) >= p_drop
+    keep = np.triu(keep, 1)
+    keep = keep | keep.T
+    out = contacts * keep
+    np.fill_diagonal(out, 1.0)
+    return out.astype(contacts.dtype)

@@ -1,0 +1,149 @@
+"""Road-network topologies (paper Sec. VI-A.3): grid, random, spider.
+
+A road network is an undirected graph of junction nodes with 2-D positions;
+vehicles move along edges (see mobility.py). This replaces the SUMO traffic
+simulator (unavailable offline) — the learning system only ever consumes the
+resulting time-varying contact graphs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class RoadNetwork:
+    name: str
+    positions: np.ndarray            # [N, 2] junction coordinates (meters)
+    edges: np.ndarray                # [M, 2] int junction index pairs (i < j)
+    adjacency: list[list[int]] = field(default_factory=list)  # node -> neighbour nodes
+
+    def __post_init__(self):
+        if not self.adjacency:
+            adj: list[list[int]] = [[] for _ in range(len(self.positions))]
+            for i, j in self.edges:
+                adj[int(i)].append(int(j))
+                adj[int(j)].append(int(i))
+            self.adjacency = adj
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.positions)
+
+    def degrees(self) -> np.ndarray:
+        return np.array([len(a) for a in self.adjacency])
+
+    def edge_length(self, i: int, j: int) -> float:
+        return float(np.linalg.norm(self.positions[i] - self.positions[j]))
+
+    def is_connected(self) -> bool:
+        seen = {0}
+        stack = [0]
+        while stack:
+            u = stack.pop()
+            for v in self.adjacency[u]:
+                if v not in seen:
+                    seen.add(v)
+                    stack.append(v)
+        return len(seen) == self.num_nodes
+
+
+def grid_net(side: int = 10, spacing: float = 100.0) -> RoadNetwork:
+    """side x side junctions, ``spacing`` meters apart (paper: 10x10, 100 m;
+    degrees 2/3/4 with frequencies {4, 32, 64})."""
+    pos = np.array([[x * spacing, y * spacing] for y in range(side) for x in range(side)], dtype=np.float64)
+    edges = []
+    for y in range(side):
+        for x in range(side):
+            n = y * side + x
+            if x + 1 < side:
+                edges.append((n, n + 1))
+            if y + 1 < side:
+                edges.append((n, n + side))
+    return RoadNetwork("grid", pos, np.array(edges, dtype=np.int64))
+
+
+def random_net(num_nodes: int = 100, seed: int = 0,
+               min_len: float = 100.0, max_len: float = 200.0,
+               max_degree: int = 5) -> RoadNetwork:
+    """Random road net: junctions grown one at a time at a random distance in
+    [min_len, max_len] from an existing junction (paper: 100 nodes, 100
+    iterations, degrees 1..5). Connectivity is guaranteed by construction.
+    """
+    rng = np.random.default_rng(seed)
+    pos = [np.zeros(2)]
+    edges: list[tuple[int, int]] = []
+    deg = [0]
+    for n in range(1, num_nodes):
+        while True:
+            anchor = int(rng.integers(0, n))
+            if deg[anchor] < max_degree:
+                break
+        theta = rng.uniform(0, 2 * math.pi)
+        dist = rng.uniform(min_len, max_len)
+        p = pos[anchor] + dist * np.array([math.cos(theta), math.sin(theta)])
+        pos.append(p)
+        edges.append((anchor, n))
+        deg[anchor] += 1
+        deg.append(1)
+    # densify: add a few shortcut edges between nearby low-degree junctions
+    pos_arr = np.stack(pos)
+    for n in range(num_nodes):
+        if deg[n] >= max_degree:
+            continue
+        d = np.linalg.norm(pos_arr - pos_arr[n], axis=1)
+        order = np.argsort(d)
+        for m in order[1:6]:
+            m = int(m)
+            if (d[m] <= max_len and deg[n] < max_degree and deg[m] < max_degree
+                    and (min(n, m), max(n, m)) not in set(edges) and rng.random() < 0.35):
+                edges.append((min(n, m), max(n, m)))
+                deg[n] += 1
+                deg[m] += 1
+    return RoadNetwork("random", pos_arr, np.array(sorted(set(edges)), dtype=np.int64))
+
+
+def spider_net(arms: int = 10, circles: int = 10, radius_inc: float = 100.0) -> RoadNetwork:
+    """Spider web: ``arms`` radial spokes x ``circles`` concentric rings,
+    ring radius growing by ``radius_inc`` (paper: 10, 10, 100 m -> 100 nodes).
+    Nodes sit at arm/circle intersections; edges run along arms and rings.
+    """
+    pos = []
+    for c in range(1, circles + 1):
+        r = c * radius_inc
+        for a in range(arms):
+            th = 2 * math.pi * a / arms
+            pos.append([r * math.cos(th), r * math.sin(th)])
+    pos_arr = np.array(pos, dtype=np.float64)
+
+    def node(c, a):  # c in [0, circles), a in [0, arms)
+        return c * arms + (a % arms)
+
+    edges = []
+    for c in range(circles):
+        for a in range(arms):
+            edges.append((node(c, a), node(c, a + 1)))        # ring edge
+            if c + 1 < circles:
+                edges.append((node(c, a), node(c + 1, a)))    # radial edge
+    edges = [(min(i, j), max(i, j)) for i, j in edges]
+    return RoadNetwork("spider", pos_arr, np.array(sorted(set(edges)), dtype=np.int64))
+
+
+def make_road_network(name: str, seed: int = 0) -> RoadNetwork:
+    if name == "grid":
+        return grid_net()
+    if name == "random":
+        return random_net(seed=seed)
+    if name == "spider":
+        return spider_net()
+    raise ValueError(f"unknown road network {name!r} (grid|random|spider)")
+
+
+def contact_matrix(positions: np.ndarray, comm_range: float = 100.0) -> np.ndarray:
+    """[K, K] 0/1 contact graph: pairs within ``comm_range`` meters; diag = 1."""
+    d = np.linalg.norm(positions[:, None, :] - positions[None, :, :], axis=-1)
+    c = (d <= comm_range).astype(np.float32)
+    np.fill_diagonal(c, 1.0)
+    return c

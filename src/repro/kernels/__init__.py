@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each with a
+jit'd ops wrapper and a pure-jnp ref oracle (interpret=True validated)."""
+from . import flash_attention, gossip_mix, kl_simplex
+
+__all__ = ["flash_attention", "gossip_mix", "kl_simplex"]

@@ -1,0 +1,3 @@
+from .kernel import flash_attention
+from .ops import attend, make_attn_impl
+from .ref import flash_attention_ref

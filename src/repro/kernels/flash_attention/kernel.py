@@ -1,0 +1,142 @@
+"""Pallas TPU flash attention: blocked online-softmax, causal + sliding
+window + GQA, for train/prefill of all eight attention architectures.
+
+Grid: (batch * q_heads, num_q_blocks, num_kv_blocks) with the kv axis
+innermost and sequential — running max / denominator / f32 accumulator live
+in VMEM scratch across kv steps. BlockSpec index maps fold the GQA group:
+the kv block for q-head h reads kv-head h // group.
+
+Tiling: q tile (BLOCK_Q, head_dim), k/v tiles (BLOCK_K, head_dim) in VMEM;
+head_dim <= 128 = one lane width; accumulation f32 on the MXU. Causal /
+window masking is positional per tile; fully-masked kv tiles are skipped via
+pl.when (no MXU work for them).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  block_q: int, block_k: int, kv_len: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # tile-level skip: causal => tiles above the diagonal; window => tiles
+    # below the band contribute nothing.
+    run = k_start <= q_start + block_q - 1 if causal else True
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # [BQ, hd]
+        k = k_ref[0].astype(jnp.float32)              # [BK, hd]
+        v = v_ref[0].astype(jnp.float32)
+        logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]                           # [BQ, 1]
+        m_cur = jnp.max(logits, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                    interpret: bool = False) -> Array:
+    """q: [B, S, H, hd]; k/v: [B, T, KV, hd] with H % KV == 0. Returns
+    [B, S, H, hd] in q.dtype. Causal alignment assumes q and kv start at the
+    same absolute position (train / prefill)."""
+    b, s, h, hd = q.shape
+    _, t, kv, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = hd ** -0.5 if scale is None else scale
+    block_q = min(block_q, max(8, s))
+    block_k = min(block_k, max(8, t))
+
+    s_pad = ((s + block_q - 1) // block_q) * block_q
+    t_pad = ((t + block_k - 1) // block_k) * block_k
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    if t_pad != t:
+        k = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+
+    # [B, S, H, hd] -> [B*H, S, hd]: heads fold into the grid's first axis
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s_pad, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, t_pad, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, t_pad, hd)
+
+    def q_index(ibh, iq, ik):
+        return (ibh, iq, 0)
+
+    def kv_index(ibh, iq, ik):
+        return (ibh // group, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, kv_len=t),
+        grid=(b * h, s_pad // block_q, t_pad // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_index),
+        out_shape=jax.ShapeDtypeStruct((b * h, s_pad, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),   # f32 accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out.reshape(b, h, s_pad, hd).transpose(0, 2, 1, 3)
+    return out[:, :s]

@@ -1,0 +1,36 @@
+"""Jit'd wrappers + the attention-module adapter.
+
+``make_attn_impl`` returns a drop-in for repro.models.attention's internal
+_sdpa signature (q, k, v, mask, scale): the positional mask argument is
+ignored in favor of the kernel's structural causal/window flags (the masks
+the model builds are exactly causal(+window), asserted in tests).
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention
+from .ref import flash_attention_ref
+
+
+def _use_kernel(interpret: bool) -> bool:
+    return interpret or jax.default_backend() == "tpu"
+
+
+def attend(q, k, v, *, causal=True, window=None, scale=None, interpret=False):
+    if _use_kernel(interpret):
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, interpret=interpret)
+    return flash_attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def make_attn_impl(window: int | None = None, *, interpret: bool = False):
+    """Adapter with the (q, k, v, mask, scale) signature used by
+    repro.models.attention. Pass as ``attn_impl=`` to forward()/prefill()."""
+
+    def impl(q, k, v, mask, scale):
+        del mask  # structural: causal (+ window) is what the model builds
+        return attend(q, k, v, causal=True, window=window, scale=scale,
+                      interpret=interpret)
+
+    return impl

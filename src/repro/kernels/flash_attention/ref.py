@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        scale: float | None = None) -> jax.Array:
+    b, s, h, hd = q.shape
+    _, t, kv, _ = k.shape
+    group = h // kv
+    scale = hd ** -0.5 if scale is None else scale
+
+    qg = q.reshape(b, s, kv, group, hd).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .kernel import gossip_mix_matmul
+from .ops import mix_params_pallas
+from .ref import gossip_mix_matmul_ref
+
+__all__ = ["gossip_mix_matmul", "mix_params_pallas", "gossip_mix_matmul_ref"]

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for the gossip mix: out = W @ X.
+
+W: [K, K] row-stochastic mixing matrix (K = vehicles, small — padded to the
+8x128 MXU tile), X: [K, P] stacked flattened model parameters (P huge).
+
+The aggregation step is bandwidth-bound: 2*K*P bytes moved for 2*K*K*P flops
+(arithmetic intensity = K flops/byte, K ~ 16-128). Tiling: W lives in VMEM
+whole; X/out stream through VMEM in (K_pad, BLOCK_P) tiles; f32 accumulation
+on the MXU. One grid axis over P tiles — each tile is read and written once,
+which is the bandwidth optimum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_P = 512
+LANE = 128
+SUBLANE = 8
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _mix_kernel(w_ref, x_ref, o_ref):
+    # w_ref: [K_pad, K_pad]; x_ref/o_ref: [K_pad, BLOCK_P] (VMEM tiles)
+    w = w_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(w, x, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_p"))
+def gossip_mix_matmul(mixing: Array, flat: Array, *, interpret: bool = False,
+                      block_p: int = BLOCK_P) -> Array:
+    """out[k, p] = sum_j mixing[k, j] * flat[j, p], via pl.pallas_call.
+
+    mixing: [K, K] float; flat: [K, P] any float dtype. Returns flat.dtype.
+    """
+    k, p = flat.shape
+    assert mixing.shape == (k, k), (mixing.shape, flat.shape)
+    k_pad = _pad_to(max(k, SUBLANE), SUBLANE)
+    p_pad = _pad_to(max(p, LANE), block_p)
+
+    w = jnp.zeros((k_pad, k_pad), mixing.dtype).at[:k, :k].set(mixing)
+    x = jnp.zeros((k_pad, p_pad), flat.dtype).at[:k, :p].set(flat)
+
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(p_pad // block_p,),
+        in_specs=[
+            pl.BlockSpec((k_pad, k_pad), lambda i: (0, 0)),      # W resident
+            pl.BlockSpec((k_pad, block_p), lambda i: (0, i)),    # X tile
+        ],
+        out_specs=pl.BlockSpec((k_pad, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, p_pad), flat.dtype),
+        interpret=interpret,
+    )(w, x)
+    return out[:k, :p]

@@ -1,0 +1,29 @@
+"""Jit'd public wrapper: apply the gossip mix to a parameter pytree using the
+Pallas kernel (TPU) or the jnp reference (CPU / non-TPU backends)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gossip_mix_matmul
+from .ref import gossip_mix_matmul_ref
+
+
+def _use_kernel(interpret: bool) -> bool:
+    return interpret or jax.default_backend() == "tpu"
+
+
+def mix_params_pallas(mixing: jax.Array, params, *, interpret: bool = False):
+    """Drop-in replacement for repro.core.aggregation.mix_params.
+
+    Flattens every leaf to [K, -1], runs the blocked kernel, reshapes back.
+    Falls back to the jnp oracle off-TPU unless ``interpret`` is set.
+    """
+    run = (lambda w, x: gossip_mix_matmul(w, x, interpret=interpret)) \
+        if _use_kernel(interpret) else gossip_mix_matmul_ref
+
+    def mix_leaf(x: jax.Array) -> jax.Array:
+        flat = x.reshape(x.shape[0], -1)
+        return run(mixing, flat).reshape(x.shape)
+
+    return jax.tree_util.tree_map(mix_leaf, params)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the gossip_mix kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gossip_mix_matmul_ref(mixing: jax.Array, flat: jax.Array) -> jax.Array:
+    out = jnp.einsum("kj,jp->kp", mixing.astype(jnp.float32),
+                     flat.astype(jnp.float32),
+                     precision=jax.lax.Precision.HIGHEST)
+    return out.astype(flat.dtype)

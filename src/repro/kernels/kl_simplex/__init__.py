@@ -1,0 +1,3 @@
+from .kernel import eg_step, entropy_rows as entropy_rows_kernel, kl_rows as kl_rows_kernel
+from .ops import entropy_rows, kl_rows, solve_p1_all_fused
+from .ref import eg_step_ref, entropy_rows_ref, kl_rows_ref

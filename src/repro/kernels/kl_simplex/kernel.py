@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused per-row KL divergence / entropy over state
+vectors, and the fused exponentiated-gradient step of the P1 solver.
+
+Inputs are the federation's state matrices: S [V, K] (V vehicles' state
+vectors), target g [K]. Unfused, one EG iteration makes ~5 HBM passes over
+[V, K] intermediates (log, sub, mul, reduce, softmax); the kernel keeps a
+(BLOCK_V, K_pad) tile in VMEM and does log/exp/mask/row-reduce in one pass.
+
+Tiling: rows (vehicles) tiled BLOCK_V x 8-sublane; K padded to the 128-lane
+boundary with masked lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANE = 128
+BLOCK_V = 256
+_EPS = 1e-12
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _kl_kernel(s_ref, g_ref, o_ref, *, k_true: int):
+    s = s_ref[...].astype(jnp.float32)                 # [BV, K_pad]
+    g = g_ref[...].astype(jnp.float32)                 # [1,  K_pad]
+    lane = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = (lane < k_true) & (s > _EPS)
+    ls = jnp.log2(jnp.clip(s, _EPS, 1.0))
+    lg = jnp.log2(jnp.clip(g, _EPS, 1.0))
+    terms = jnp.where(valid, s * (ls - lg), 0.0)
+    o_ref[...] = jnp.sum(terms, axis=1, keepdims=True)
+
+
+def _entropy_kernel(s_ref, o_ref, *, k_true: int):
+    s = s_ref[...].astype(jnp.float32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = (lane < k_true) & (s > _EPS)
+    terms = jnp.where(valid, s * jnp.log2(jnp.clip(s, _EPS, 1.0)), 0.0)
+    o_ref[...] = -jnp.sum(terms, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kl_rows(states: Array, target: Array, *, interpret: bool = False) -> Array:
+    """Per-row D_KL(states[v] || target) in bits. states [V, K] -> [V]."""
+    v, k = states.shape
+    k_pad = _pad_to(max(k, LANE), LANE)
+    bv = min(BLOCK_V, _pad_to(max(v, 8), 8))
+    v_pad = _pad_to(max(v, 8), bv)
+
+    s = jnp.zeros((v_pad, k_pad), states.dtype).at[:v, :k].set(states)
+    g = jnp.zeros((1, k_pad), target.dtype).at[0, :k].set(target)
+
+    out = pl.pallas_call(
+        functools.partial(_kl_kernel, k_true=k),
+        grid=(v_pad // bv,),
+        in_specs=[
+            pl.BlockSpec((bv, k_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, k_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bv, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(s, g)
+    return out[:v, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def entropy_rows(states: Array, *, interpret: bool = False) -> Array:
+    """Per-row entropy H(states[v]) in bits. states [V, K] -> [V]."""
+    v, k = states.shape
+    k_pad = _pad_to(max(k, LANE), LANE)
+    bv = min(BLOCK_V, _pad_to(max(v, 8), 8))
+    v_pad = _pad_to(max(v, 8), bv)
+
+    s = jnp.zeros((v_pad, k_pad), states.dtype).at[:v, :k].set(states)
+    out = pl.pallas_call(
+        functools.partial(_entropy_kernel, k_true=k),
+        grid=(v_pad // bv,),
+        in_specs=[pl.BlockSpec((bv, k_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bv, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(s)
+    return out[:v, 0]
+
+
+def _eg_step_kernel(a_ref, grad_ref, mask_ref, o_ref, *, step_size: float):
+    """One fused EG step for a tile of vehicles: centered-normalized
+    exponentiated-gradient update + simplex renormalization."""
+    a = a_ref[...].astype(jnp.float32)                 # [BV, K_pad] alpha
+    grad = grad_ref[...].astype(jnp.float32)
+    m = mask_ref[...].astype(jnp.float32)              # 0/1 contact mask
+    n_act = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+    gbar = jnp.sum(grad * m, axis=1, keepdims=True) / n_act
+    centered = (grad - gbar) * m
+    scale = step_size / jnp.maximum(jnp.max(jnp.abs(centered), axis=1, keepdims=True), 1.0)
+    logit = jnp.where(m > 0, jnp.log(jnp.clip(a, _EPS, 1.0)) - scale * centered, -jnp.inf)
+    zmax = jnp.max(logit, axis=1, keepdims=True)
+    e = jnp.where(m > 0, jnp.exp(logit - zmax), 0.0)
+    o_ref[...] = (e / jnp.maximum(jnp.sum(e, axis=1, keepdims=True), _EPS)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "step_size"))
+def eg_step(alpha: Array, grad: Array, mask: Array, *, step_size: float = 2.0,
+            interpret: bool = False) -> Array:
+    """Fused EG update for all vehicles: alpha/grad/mask [V, K] -> [V, K]."""
+    v, k = alpha.shape
+    k_pad = _pad_to(max(k, LANE), LANE)
+    bv = min(BLOCK_V, _pad_to(max(v, 8), 8))
+    v_pad = _pad_to(max(v, 8), bv)
+
+    padf = lambda x: jnp.zeros((v_pad, k_pad), x.dtype).at[:v, :k].set(x)
+    out = pl.pallas_call(
+        functools.partial(_eg_step_kernel, step_size=step_size),
+        grid=(v_pad // bv,),
+        in_specs=[pl.BlockSpec((bv, k_pad), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((bv, k_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v_pad, k_pad), jnp.float32),
+        interpret=interpret,
+    )(padf(alpha), padf(grad), padf(mask))
+    return out[:v, :k]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the kl_simplex kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def kl_rows_ref(states: jax.Array, target: jax.Array) -> jax.Array:
+    s = jnp.clip(states.astype(jnp.float32), _EPS, 1.0)
+    g = jnp.clip(target.astype(jnp.float32), _EPS, 1.0)
+    terms = jnp.where(states > _EPS, states * (jnp.log2(s) - jnp.log2(g)[None, :]), 0.0)
+    return jnp.sum(terms, axis=-1)
+
+
+def entropy_rows_ref(states: jax.Array) -> jax.Array:
+    s = jnp.clip(states.astype(jnp.float32), _EPS, 1.0)
+    terms = jnp.where(states > _EPS, states * jnp.log2(s), 0.0)
+    return -jnp.sum(terms, axis=-1)
+
+
+def eg_step_ref(alpha: jax.Array, grad: jax.Array, mask: jax.Array,
+                step_size: float = 2.0) -> jax.Array:
+    a = alpha.astype(jnp.float32)
+    g = grad.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    n_act = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+    gbar = jnp.sum(g * m, axis=1, keepdims=True) / n_act
+    centered = (g - gbar) * m
+    scale = step_size / jnp.maximum(jnp.max(jnp.abs(centered), axis=1, keepdims=True), 1.0)
+    logits = jnp.where(m > 0, jnp.log(jnp.clip(a, _EPS, 1.0)) - scale * centered, -jnp.inf)
+    new = jax.nn.softmax(logits, axis=1)
+    new = new * m
+    return new / jnp.maximum(jnp.sum(new, axis=1, keepdims=True), _EPS)

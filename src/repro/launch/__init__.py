@@ -1,0 +1,6 @@
+"""Launch layer: production meshes, input shapes, distributed steps, dry-run.
+
+NOTE: dryrun must be run as a module entry (python -m repro.launch.dryrun) so
+its XLA_FLAGS device-count override precedes jax initialization; it is not
+imported here."""
+from . import mesh, shapes, sharding, steps

@@ -1,0 +1,225 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with 512 placeholder host devices. Proves the
+distribution config is coherent without hardware; emits memory/cost analysis
+and the HLO collective schedule for the roofline (EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+# The VERY FIRST lines, before ANY other import (jax locks the device count
+# on first init):
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs.base import ArchConfig                      # noqa: E402
+from ..configs.registry import ARCHITECTURES, get_config   # noqa: E402
+from ..models import transformer as transformer_lib        # noqa: E402
+from . import mesh as mesh_lib                             # noqa: E402
+from . import shapes as shapes_lib                         # noqa: E402
+from . import steps as steps_lib                           # noqa: E402
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(",
+)
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-operand bytes of every collective op in the (SPMD-
+    partitioned) HLO. Returns per-kind byte totals."""
+    totals: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # result shape is on the lhs: "%name = bf16[1,2,3]{...} all-gather(...)"
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=", 1)[1]
+        op_pos = lhs.find(m.group(0))
+        shapes = SHAPE_RE.findall(lhs[:op_pos])
+        nbytes = 0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for tok in dims.split(","):
+                if tok:
+                    n *= int(tok)
+            nbytes += n * _DTYPE_BYTES[dt]
+        totals[kind] = totals.get(kind, 0) + nbytes
+    return totals
+
+
+def _first(x):
+    """cost_analysis() may return a dict or a list of dicts."""
+    if isinstance(x, (list, tuple)):
+        return x[0] if x else {}
+    return x or {}
+
+
+def dryrun_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+                lower_only: bool = False, variant: str = "baseline",
+                dump_hlo: str | None = None,
+                step_overrides: dict | None = None) -> dict:
+    """Lower + compile one (arch x shape x mesh); return the roofline inputs."""
+    from .variants import apply_variant
+
+    base_cfg = get_config(arch)
+    shape = shapes_lib.INPUT_SHAPES[shape_name]
+    t0 = time.time()
+
+    if shape.kind == "train":
+        vehicle, fsdp = shapes_lib.FED_LAYOUT[arch]
+        mesh = mesh_lib.make_federation_mesh(multi_pod=multi_pod,
+                                             vehicle=vehicle, fsdp=fsdp)
+        cfg = base_cfg.pad_for_mesh(16)
+        cfg, overrides = apply_variant(variant, cfg, shape.kind)
+        overrides.update(step_overrides or {})
+        num_v = mesh.shape.get("pod", 1) * vehicle
+        ts = steps_lib.build_dds_train_step(cfg, mesh, **overrides)
+        params_sds, opt_sds, sm_sds = steps_lib.train_state_specs(cfg, num_v)
+        in_sds = shapes_lib.train_input_specs(cfg, shape, num_v)
+        args = [params_sds, opt_sds, sm_sds, in_sds["tokens"], in_sds["contact"],
+                in_sds["target"], jax.ShapeDtypeStruct((2,), jnp.uint32)]
+        if cfg.embed_input:
+            args.append(in_sds["prefix_embeds"])
+        fn, in_specs, out_specs = ts.fn, ts.in_specs, ts.out_specs
+    else:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+        if shape_name == "long_500k":
+            cfg = shapes_lib.long_context_cfg(shapes_lib.serve_cfg(base_cfg))
+        else:
+            cfg = shapes_lib.serve_cfg(base_cfg)
+        cfg, overrides = apply_variant(variant, cfg, shape.kind)
+        overrides.update(step_overrides or {})
+        if shape.kind == "prefill":
+            allowed = {k: v for k, v in overrides.items()
+                       if k in ("attn_impl", "window")}
+            ss = steps_lib.build_prefill_step(cfg, mesh, **allowed)
+            in_sds = shapes_lib.prefill_input_specs(cfg, shape)
+            args = [None, in_sds["tokens"]]  # params filled below
+            if cfg.embed_input:
+                args.append(in_sds["prefix_embeds"])
+        else:
+            allowed = {k: v for k, v in overrides.items()
+                       if k in ("replicate_batch", "seq_shard_kv")}
+            allowed.setdefault("replicate_batch", shape.global_batch < 16)
+            ss = steps_lib.build_decode_step(cfg, mesh, **allowed)
+            in_sds = shapes_lib.decode_input_specs(cfg, shape)
+            args = [None, in_sds["tokens"], in_sds["state"]]
+        params_sds = jax.eval_shape(
+            lambda r: transformer_lib.init_params(r, cfg), jax.random.PRNGKey(0))
+        args[0] = params_sds
+        fn, in_specs, out_specs = ss.fn, ss.in_specs, ss.out_specs
+
+    with mesh:
+        jitted = jax.jit(fn,
+                         in_shardings=steps_lib.named(mesh, in_specs),
+                         out_shardings=steps_lib.named(mesh, out_specs))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        result = {
+            "arch": arch, "shape": shape_name,
+            "multi_pod": multi_pod, "mesh": dict(mesh.shape),
+            "lower_s": round(t_lower, 1),
+        }
+        if lower_only:
+            return result
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = _first(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    if dump_hlo:
+        with open(dump_hlo, "w") as f:
+            f.write(hlo)
+    from ..roofline.hlo_cost import analyze_hlo
+    model = analyze_hlo(hlo)  # trip-count-aware per-device flops/bytes
+    result.update({
+        "compile_s": round(t_compile, 1),
+        "xla_flops": float(cost.get("flops", -1)),
+        "flops_per_device": model["flops_per_device"],
+        "traffic_bytes_per_device": model["traffic_bytes_per_device"],
+        "collective_bytes_per_device": model["collective_bytes_per_device"],
+        "collective_bytes_text": collective_bytes(hlo),
+        "memory_analysis": {
+            k: getattr(mem, k) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if mem is not None and hasattr(mem, k)},
+    })
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), default=None)
+    ap.add_argument("--shape", choices=sorted(shapes_lib.INPUT_SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--lower-only", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--dump-hlo", default=None)
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ARCHITECTURES:
+            for s in shapes_lib.INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in pairs:
+        tag = f"{arch} x {shape} ({'2x16x16' if args.multi_pod else '16x16'})"
+        try:
+            res = dryrun_pair(arch, shape, multi_pod=args.multi_pod,
+                              lower_only=args.lower_only, variant=args.variant,
+                              dump_hlo=args.dump_hlo)
+            res["variant"] = args.variant
+            print(f"[OK] {tag}: flops/dev={res.get('flops_per_device'):.3e} "
+                  f"traffic/dev={res.get('traffic_bytes_per_device'):.3e}B "
+                  f"coll/dev={sum(res.get('collective_bytes_per_device', {}).values()):.3e}B "
+                  f"lower={res['lower_s']}s compile={res.get('compile_s')}s",
+                  flush=True)
+            print("     memory:", res.get("memory_analysis"), flush=True)
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            failures += 1
+            res = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(res) + "\n")
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Production meshes.
+
+``make_production_mesh`` is the contractual entry point (see the dry-run
+spec): (16, 16) "data" x "model" single-pod, (2, 16, 16) "pod" x "data" x
+"model" multi-pod. Functions, not module constants — importing this module
+never touches jax device state.
+
+``make_federation_mesh`` reshapes the *same* devices (identical order) into
+(pod?, vehicle, fsdp, model) for DFL training: the mesh "data" axis is
+factorized into vehicle-parallel and per-vehicle FSDP sub-axes
+(DESIGN.md §3 "Big-model federation").
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_federation_mesh(*, multi_pod: bool = False, vehicle: int = 16, fsdp: int = 1):
+    """Mesh (pod?, vehicle, fsdp, model) over the production devices.
+
+    vehicle * fsdp must equal the production data-axis size (16).
+    """
+    if vehicle * fsdp != 16:
+        raise ValueError(f"vehicle({vehicle}) * fsdp({fsdp}) must be 16")
+    prod = make_production_mesh(multi_pod=multi_pod)
+    devices = np.asarray(prod.devices)
+    if multi_pod:
+        devices = devices.reshape(2, vehicle, fsdp, 16)
+        return Mesh(devices, ("pod", "vehicle", "fsdp", "model"))
+    devices = devices.reshape(vehicle, fsdp, 16)
+    return Mesh(devices, ("vehicle", "fsdp", "model"))
+
+
+def vehicle_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes the federation vehicle dim is sharded over."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "vehicle")
+    return ("vehicle",)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes a serving batch dim is sharded over."""
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def num_vehicles(mesh: Mesh, *, per_pod_vehicle: int) -> int:
+    pods = mesh.shape.get("pod", 1)
+    return pods * per_pod_vehicle
+
+
+def total_devices(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

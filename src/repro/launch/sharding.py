@@ -1,0 +1,187 @@
+"""PartitionSpec builders for every parameter/state tree in the system.
+
+Baseline layout (Megatron-style TP over "model" + optional FSDP over "fsdp"):
+  attention : QKV column-parallel (heads), O row-parallel
+  MLP       : gate/up column-parallel (d_ff), down row-parallel
+  MoE       : per-expert d_ff tensor-parallel (expert dim NOT sharded --
+              expert-parallel is a perf variant, see EXPERIMENTS.md §Perf)
+  embed     : vocab-sharded; lm_head vocab-sharded on the output dim
+  rwkv6     : inner width (padded heads x head_dim) column-parallel
+  ssm       : d_inner channel-parallel
+
+KV projections whose width is not divisible by the model-parallel degree
+(GQA kv in {1, 2, 5}) are replicated — the replicate-KV regime (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import rwkv6 as rwkv6_lib
+
+PyTree = Any
+
+
+def _attn_specs(cfg: ArchConfig, model: str, fsdp) -> dict:
+    kv_ok = (cfg.num_kv_heads * cfg.head_dim) % 16 == 0
+    kvs = model if kv_ok else None
+    spec = {
+        "wq": P(None, fsdp, model),
+        "wk": P(None, fsdp, kvs),
+        "wv": P(None, fsdp, kvs),
+        "wo": P(None, model, fsdp),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = P(None, model)
+        spec["bk"] = P(None, kvs)
+        spec["bv"] = P(None, kvs)
+    if cfg.qk_norm:
+        spec["q_norm"] = P(None, None)
+        spec["k_norm"] = P(None, None)
+    return spec
+
+
+def _mlp_specs(model: str, fsdp) -> dict:
+    return {
+        "w_gate": P(None, fsdp, model),
+        "w_up": P(None, fsdp, model),
+        "w_down": P(None, model, fsdp),
+    }
+
+
+def _moe_specs(model: str, fsdp) -> dict:
+    return {
+        "router": P(None, fsdp, None),
+        "w_gate": P(None, None, fsdp, model),
+        "w_up": P(None, None, fsdp, model),
+        "w_down": P(None, None, model, fsdp),
+    }
+
+
+def _time_mix_specs(model: str, fsdp) -> dict:
+    return {
+        "mix_mu": P(None, None, None),
+        "mix_w1": P(None, fsdp, None),
+        "mix_w2": P(None, None, None, None),
+        "wr": P(None, fsdp, model),
+        "wk": P(None, fsdp, model),
+        "wv": P(None, fsdp, model),
+        "wg": P(None, fsdp, model),
+        "wo": P(None, model, fsdp),
+        "decay_w0": P(None, model),
+        "decay_w1": P(None, fsdp, None),
+        "decay_w2": P(None, None, model),
+        "bonus_u": P(None, model, None),
+        "ln_x": P(None, model),
+    }
+
+
+def _channel_mix_specs(model: str, fsdp) -> dict:
+    return {
+        "mix_k": P(None, None),
+        "mix_r": P(None, None),
+        "wk": P(None, fsdp, model),
+        "wv": P(None, model, fsdp),
+        "wr": P(None, None, model),
+    }
+
+
+def _ssm_specs(model: str, fsdp) -> dict:
+    return {
+        "in_proj": P(None, fsdp, model),
+        "conv_w": P(None, None, model),
+        "conv_b": P(None, model),
+        "x_proj": P(None, model, None),
+        "dt_proj": P(None, None, model),
+        "dt_bias": P(None, model),
+        "log_a": P(None, model, None),
+        "d_skip": P(None, model),
+        "out_proj": P(None, model, fsdp),
+    }
+
+
+def build_param_specs(cfg: ArchConfig, *, model: str = "model",
+                      fsdp: str | None = None) -> dict:
+    """PartitionSpec tree mirroring transformer.init_params(cfg)."""
+    blocks: dict = {"norm1": P(None, None), "norm2": P(None, None)}
+    if cfg.family == "ssm":
+        blocks["norm1_b"] = P(None, None)
+        blocks["norm2_b"] = P(None, None)
+        blocks["time_mix"] = _time_mix_specs(model, fsdp)
+        blocks["channel_mix"] = _channel_mix_specs(model, fsdp)
+    else:
+        blocks["attn"] = _attn_specs(cfg, model, fsdp)
+        if cfg.hybrid:
+            blocks["ssm"] = _ssm_specs(model, fsdp)
+            blocks["branch_norm_attn"] = P(None, None)
+            blocks["branch_norm_ssm"] = P(None, None)
+        if cfg.is_moe:
+            blocks["moe"] = _moe_specs(model, fsdp)
+        else:
+            blocks["mlp"] = _mlp_specs(model, fsdp)
+
+    specs = {
+        "embed": P(model, None),
+        "blocks": blocks,
+        "final_norm": P(None),
+    }
+    if cfg.family == "ssm":
+        specs["final_norm_b"] = P(None)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, model)
+    return specs
+
+
+def prepend_axes(specs: PyTree, lead: tuple) -> PyTree:
+    """Prepend leading sharded dims (e.g. the stacked vehicle axis) to every
+    spec in the tree."""
+    return jax.tree_util.tree_map(
+        lambda s: P(*lead, *s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def decode_state_specs(cfg: ArchConfig, batch_axes, model: str = "model"):
+    """Specs for transformer.DecodeState (leading [L] layer-stack dim).
+
+    KV cache: batch over the data axes; kv-head dim over "model" when the
+    (padded) kv count divides 16, else replicated. Returns a DecodeState of
+    PartitionSpecs (pytree-matching the real state).
+    """
+    from ..models.attention import KVCache
+    from ..models.transformer import DecodeState
+
+    b = batch_axes if isinstance(batch_axes, tuple) else (batch_axes,)
+    b = b[0] if len(b) == 1 else b
+    kv = rk = sm = None
+    if not cfg.attn_free:
+        kv_ok = cfg.num_kv_heads % 16 == 0
+        if kv_ok:
+            kvs, seqs = model, None
+        else:
+            # kv count not divisible by the model degree: shard the cache
+            # over the SEQUENCE dim (flash-decode-style sequence parallelism,
+            # DESIGN.md §5). Replicating forces per-step cache regathers
+            # (measured +29 GB/step on qwen2.5 decode_32k); hd-sharding makes
+            # XLA gather full K per layer (268 MB x L); T-sharding leaves only
+            # a [B,1,kv,T] logits gather (16 MB x L) + a tiny output psum.
+            kvs, seqs = None, model
+        kv = KVCache(
+            k=P(None, b, seqs, kvs, None),
+            v=P(None, b, seqs, kvs, None),
+            length=P(None),
+        )
+    if cfg.family == "ssm":
+        rk = {
+            "shift": P(None, b, None),
+            "wkv": P(None, b, model, None, None),
+            "cm_shift": P(None, b, None),
+        }
+    if cfg.hybrid:
+        sm = {
+            "conv": P(None, b, None, model),
+            "h": P(None, b, model, None),
+        }
+    return DecodeState(kv=kv, rwkv=rk, ssm=sm, position=P())

@@ -1,0 +1,212 @@
+"""Jit-able distributed steps: the DFL-DDS training round and the serving
+steps (prefill / decode), with their sharding specs.
+
+These are what dryrun.py lowers and what train.py / serve.py execute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core import aggregation, kl_solver, state_vector
+from ..models import transformer
+from ..optim import adamw, apply_updates
+from . import mesh as mesh_lib
+from . import sharding as shard_lib
+
+Array = jax.Array
+PyTree = Any
+
+
+# ------------------------------------------------------------- training -----
+
+@dataclass
+class TrainStep:
+    fn: Callable                 # (params, opt, state_matrix, tokens, contact, target, rng[, prefix]) -> ...
+    in_specs: tuple              # PartitionSpec pytrees, same order as fn args
+    out_specs: tuple
+    param_specs: PyTree
+    opt_specs: PyTree
+
+
+def build_dds_train_step(cfg: ArchConfig, mesh: Mesh, *,
+                         local_steps: int = 1,
+                         lr: float = 1e-4,
+                         p1_steps: int = 100,
+                         remat: bool = True,
+                         attn_impl=None,
+                         compute_dtype=None,
+                         mix_params_fn=None) -> TrainStep:
+    """One DFL-DDS global iteration over the stacked vehicle axis, for a
+    transformer arch. The paper's technique (P1 -> alpha -> gossip mix ->
+    local steps -> state update) wired to pjit shardings.
+    """
+    v_axes = mesh_lib.vehicle_axes(mesh)
+    fsdp = "fsdp" if "fsdp" in mesh.axis_names and mesh.shape["fsdp"] > 1 else None
+    optimizer = adamw(lr)
+    mix_fn = mix_params_fn or aggregation.mix_params
+
+    def loss_fn(params, toks, pre):
+        if compute_dtype is not None:
+            # bf16 compute with f32 master params (grad-of-cast casts back)
+            params = jax.tree_util.tree_map(
+                lambda x: x.astype(compute_dtype), params)
+        return transformer.lm_loss(params, toks, cfg, prefix_embeds=pre,
+                                   remat=remat, attn_impl=attn_impl)
+
+    def local_train(params, opt_state, tokens, rng, prefix):
+        def one_step(carry, inp):
+            params, opt_state = carry
+            toks, pre = inp
+            loss, grads = jax.value_and_grad(loss_fn)(params, toks, pre)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            return (apply_updates(params, updates), opt_state), loss
+
+        # [E]-step local scan; with local_steps == 1 this is a single call
+        toks_e = jnp.broadcast_to(tokens, (local_steps,) + tokens.shape)
+        pre_e = (jnp.broadcast_to(prefix, (local_steps,) + prefix.shape)
+                 if prefix is not None else None)
+        (params, opt_state), losses = jax.lax.scan(
+            one_step, (params, opt_state), (toks_e, pre_e))
+        return params, opt_state, jnp.mean(losses)
+
+    def train_step(params, opt_state, state_matrix, tokens, contact, target,
+                   rng, prefix_embeds=None):
+        # -- P1: aggregation weights from state vectors (Alg. 1 steps 1-2)
+        mixing = kl_solver.solve_p1_all(state_matrix, target, contact,
+                                        num_steps=p1_steps)
+        mixing = aggregation.mixing_from_alpha(mixing, contact)
+        # -- gossip mix of all vehicle models (Eq. 10)
+        params = mix_fn(mixing, params)
+        # -- E local iterations per vehicle (Eq. 3)
+        v = tokens.shape[0]
+        rngs = jax.random.split(rng, v)
+        if prefix_embeds is None:
+            params, opt_state, losses = jax.vmap(
+                lambda p, o, t, r: local_train(p, o, t, r, None)
+            )(params, opt_state, tokens, rngs)
+        else:
+            params, opt_state, losses = jax.vmap(local_train)(
+                params, opt_state, tokens, rngs, prefix_embeds)
+        # -- state vectors (Eqs. 5-7)
+        state_matrix = state_vector.aggregate(state_matrix, mixing)
+        state_matrix = state_vector.local_update(state_matrix, lr, local_steps)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "kl": jnp.mean(state_vector.kl_to_target(state_matrix, target)),
+        }
+        return params, opt_state, state_matrix, metrics
+
+    pspec = shard_lib.build_param_specs(cfg, fsdp=fsdp)
+    pspec_v = shard_lib.prepend_axes(pspec, (v_axes,))
+    from ..optim.optimizers import AdamState
+    opt_specs = AdamState(count=P(v_axes), mu=pspec_v, nu=pspec_v)
+
+    batch_spec = P(v_axes, fsdp, None)
+    in_specs = (
+        pspec_v,                     # params
+        opt_specs,                   # opt_state
+        P(v_axes, None),             # state_matrix
+        batch_spec,                  # tokens [V, B, S]
+        P(v_axes, None),             # contact
+        P(None),                     # target
+        P(None),                     # rng
+    )
+    if cfg.embed_input:
+        in_specs = in_specs + (P(v_axes, fsdp, None, None),)
+    metric_specs = {"loss": P(), "kl": P()}
+    out_specs = (pspec_v, opt_specs, P(v_axes, None), metric_specs)
+    return TrainStep(fn=train_step, in_specs=in_specs, out_specs=out_specs,
+                     param_specs=pspec_v, opt_specs=opt_specs)
+
+
+def init_train_state(cfg: ArchConfig, num_vehicles: int, rng: Array,
+                     dtype=jnp.float32):
+    """Host-side init of (params_stack, opt_state_stack, state_matrix) for
+    real (small/reduced) runs — NOT used by the dry-run."""
+    params = transformer.init_params(rng, cfg, dtype=dtype)
+    params = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (num_vehicles,) + x.shape).copy(), params)
+    optimizer = adamw(1e-4)
+    opt_state = jax.vmap(optimizer.init)(params)
+    return params, opt_state, state_vector.init_state(num_vehicles)
+
+
+def train_state_specs(cfg: ArchConfig, num_vehicles: int,
+                      rng_like=None) -> tuple:
+    """ShapeDtypeStructs for (params, opt_state, state_matrix) — stacked [V]."""
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_sds = jax.eval_shape(partial(transformer.init_params, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    stack = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((num_vehicles,) + x.shape, x.dtype), t)
+    params_v = stack(params_sds)
+    from ..optim.optimizers import AdamState
+    zeros_like = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    opt_v = AdamState(count=jax.ShapeDtypeStruct((num_vehicles,), jnp.int32),
+                      mu=zeros_like(params_v), nu=zeros_like(params_v))
+    sm = jax.ShapeDtypeStruct((num_vehicles, num_vehicles), jnp.float32)
+    return params_v, opt_v, sm
+
+
+# -------------------------------------------------------------- serving -----
+
+@dataclass
+class ServeStep:
+    fn: Callable
+    in_specs: tuple
+    out_specs: tuple
+    param_specs: PyTree
+
+
+def build_prefill_step(cfg: ArchConfig, mesh: Mesh, *, attn_impl=None,
+                       window: int | None = None) -> ServeStep:
+    d_axes = mesh_lib.data_axes(mesh)
+    b_ax = d_axes[0] if len(d_axes) == 1 else d_axes
+
+    def prefill_step(params, tokens, prefix_embeds=None):
+        return transformer.prefill(params, tokens, cfg,
+                                   prefix_embeds=prefix_embeds,
+                                   window=window, attn_impl=attn_impl)
+
+    pspec = shard_lib.build_param_specs(cfg)
+    in_specs = (pspec, P(b_ax, None))
+    if cfg.embed_input:
+        in_specs = in_specs + (P(b_ax, None, None),)
+    state_specs = shard_lib.decode_state_specs(cfg, b_ax)
+    out_specs = (P(b_ax, "model"), state_specs)
+    return ServeStep(fn=prefill_step, in_specs=in_specs, out_specs=out_specs,
+                     param_specs=pspec)
+
+
+def build_decode_step(cfg: ArchConfig, mesh: Mesh, *,
+                      replicate_batch: bool = False) -> ServeStep:
+    d_axes = mesh_lib.data_axes(mesh)
+    b_ax = None if replicate_batch else (d_axes[0] if len(d_axes) == 1 else d_axes)
+
+    def decode_fn(params, tokens, state):
+        return transformer.decode_step(params, tokens, state, cfg)
+
+    pspec = shard_lib.build_param_specs(cfg)
+    state_specs = shard_lib.decode_state_specs(cfg, b_ax)
+    in_specs = (pspec, P(b_ax, None), state_specs)
+    out_specs = (P(b_ax, "model"), state_specs)
+    return ServeStep(fn=decode_fn, in_specs=in_specs, out_specs=out_specs,
+                     param_specs=pspec)
+
+
+# ------------------------------------------------------------- helpers ------
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

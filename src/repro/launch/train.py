@@ -1,0 +1,134 @@
+"""Training driver.
+
+Two modes:
+  * --arch mnist-cnn|cifar-cnn : the paper's experiments — federated CNN
+    training over a vehicular network (delegates to repro.fed.simulator).
+  * --arch <transformer id>    : DFL-DDS over language models. On CPU use
+    --reduced (2-layer variant, synthetic tokens); the full configs are for
+    the dry-run / real pods.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch mnist-cnn --algorithm dds --epochs 50
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced --vehicles 4 --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import ARCHITECTURES, PAPER_MODELS, get_config
+from ..core import state_vector
+from ..fed import topology as topo_lib
+from ..fed.simulator import SimulationConfig, run_simulation
+from .. import checkpoint as ckpt_lib
+
+
+def run_cnn_federation(args) -> None:
+    cfg = SimulationConfig(
+        algorithm=args.algorithm,
+        dataset="mnist" if "mnist" in args.arch else "cifar10",
+        road_net=args.road_net,
+        distribution=args.distribution,
+        num_vehicles=args.vehicles,
+        epochs=args.epochs,
+        local_steps=args.local_steps,
+        batch_size=args.batch_size,
+        eval_every=args.eval_every,
+        seed=args.seed,
+    )
+    res = run_simulation(cfg, progress=True)
+    print(f"final avg accuracy: {res.final_accuracy():.4f}  "
+          f"({res.wall_time:.1f}s, {cfg.epochs} epochs)")
+    if args.checkpoint_dir:
+        mgr = ckpt_lib.CheckpointManager(args.checkpoint_dir)
+        mgr.save(cfg.epochs, {"avg_accuracy": np.array(res.avg_accuracy)},
+                 {"algorithm": cfg.algorithm})
+        print("history checkpointed to", args.checkpoint_dir)
+
+
+def run_transformer_federation(args) -> None:
+    from ..models import transformer
+    from . import steps as steps_lib
+    from jax.sharding import Mesh
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    v = args.vehicles
+    # single-device "mesh" so the same step code runs on CPU
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1, 1),
+                ("vehicle", "fsdp", "model"))
+    ts = steps_lib.build_dds_train_step(cfg, mesh, lr=args.lr, remat=False,
+                                        p1_steps=args.p1_steps)
+    rng = jax.random.PRNGKey(args.seed)
+    params, opt_state, state_matrix = steps_lib.init_train_state(cfg, v, rng)
+    target = jnp.ones((v,)) / v
+
+    # ring contact topology (vehicles meeting around a loop road)
+    contact = np.eye(v, dtype=np.float32)
+    for i in range(v):
+        contact[i, (i + 1) % v] = contact[i, (i - 1) % v] = 1.0
+    contact = jnp.asarray(contact)
+
+    step = jax.jit(ts.fn)
+    s = args.seq_len
+    for it in range(args.steps):
+        rng, kd, kr = jax.random.split(rng, 3)
+        tokens = jax.random.randint(kd, (v, args.per_vehicle_batch, s), 0,
+                                    cfg.true_vocab_size)
+        t0 = time.time()
+        if cfg.embed_input:
+            prefix = jax.random.normal(
+                kd, (v, args.per_vehicle_batch, cfg.frontend_tokens, cfg.d_model)) * 0.02
+            params, opt_state, state_matrix, metrics = step(
+                params, opt_state, state_matrix, tokens, contact, target, kr, prefix)
+        else:
+            params, opt_state, state_matrix, metrics = step(
+                params, opt_state, state_matrix, tokens, contact, target, kr)
+        jax.block_until_ready(metrics["loss"])
+        print(f"step {it:3d} loss={float(metrics['loss']):.4f} "
+              f"kl={float(metrics['kl']):.4f} ({time.time()-t0:.2f}s)", flush=True)
+
+    if args.checkpoint_dir:
+        mgr = ckpt_lib.CheckpointManager(args.checkpoint_dir)
+        mgr.save(args.steps, params, {"arch": cfg.name})
+        print("params checkpointed to", args.checkpoint_dir)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    choices=sorted(ARCHITECTURES) + sorted(PAPER_MODELS))
+    ap.add_argument("--algorithm", default="dds", choices=["dds", "dfl", "sp"])
+    ap.add_argument("--road-net", default="grid", choices=["grid", "random", "spider"])
+    ap.add_argument("--distribution", default="balanced_noniid",
+                    choices=["balanced_noniid", "unbalanced_iid"])
+    ap.add_argument("--vehicles", type=int, default=None)
+    ap.add_argument("--epochs", type=int, default=100)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--local-steps", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=80)
+    ap.add_argument("--per-vehicle-batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--p1-steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    if args.arch in PAPER_MODELS:
+        args.vehicles = args.vehicles or 100
+        run_cnn_federation(args)
+    else:
+        args.vehicles = args.vehicles or 4
+        run_transformer_federation(args)
+
+
+if __name__ == "__main__":
+    main()

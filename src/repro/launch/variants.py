@@ -1,0 +1,59 @@
+"""Perf variants for the hillclimbing loop (EXPERIMENTS.md §Perf).
+
+A variant maps (cfg, shape_kind) -> (cfg', step_overrides). The dry-run's
+--variant flag selects one; the baseline is the paper-faithful configuration.
+
+  flash        blocked online-softmax attention (no S^2 logits/mask buffers)
+               — HLO twin of the Pallas flash kernel
+  bf16         bf16 compute with f32 master params (train)
+  gossip_bf16  bf16 gossip-mix exchange payload (train)
+  ragged_moe   sorted/ragged-dot MoE dispatch instead of dense-all-experts
+  opt          every variant applicable to the arch/shape, combined
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import aggregation
+from ..models.attention import make_blocked_impl
+
+VARIANTS = ("baseline", "flash", "bf16", "gossip_bf16", "ragged_moe", "opt",
+            "opt_ragged")
+
+
+def apply_variant(name: str, cfg: ArchConfig, shape_kind: str):
+    """Returns (cfg, overrides dict for the step builder)."""
+    if name == "baseline":
+        return cfg, {}
+    overrides: dict = {}
+    if name == "opt":
+        # measured-best combination (see EXPERIMENTS.md §Perf):
+        #  * blocked/flash attention shows no HLO-level traffic win under the
+        #    jnp twin (the benefit is VMEM fusion, only realized by the
+        #    Pallas kernel on TPU — iterations A4/A5, refuted under the HLO
+        #    proxy) — so it is NOT part of opt for the dry-run.
+        #  * ragged MoE loses its d-contraction FSDP sharding under pjit
+        #    (refuted, iteration C2) — dense+combine-fold stays.
+        parts = {"train": ["bf16", "gossip_bf16"],
+                 "prefill": [],
+                 "decode": []}[shape_kind]
+    elif name == "opt_ragged":
+        parts = ["bf16", "gossip_bf16", "ragged_moe"]
+    else:
+        parts = [name]
+    for part in parts:
+        if part == "flash" and not cfg.attn_free and shape_kind != "decode":
+            overrides["attn_impl"] = make_blocked_impl(window=cfg.sliding_window)
+        elif part == "bf16" and shape_kind == "train":
+            overrides["compute_dtype"] = jnp.bfloat16
+        elif part == "gossip_bf16" and shape_kind == "train":
+            overrides["mix_params_fn"] = aggregation.mix_params_lowp
+        elif part == "ragged_moe" and cfg.is_moe:
+            cfg = dataclasses.replace(cfg, moe_impl="ragged")
+        elif name != "opt":
+            raise ValueError(f"variant {part!r} not applicable to "
+                             f"{cfg.name} x {shape_kind}")
+    return cfg, overrides

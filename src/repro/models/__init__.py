@@ -1,0 +1,3 @@
+from . import attention, cnn, layers, moe, multimodal, rwkv6, ssm, transformer
+
+__all__ = ["attention", "cnn", "layers", "moe", "multimodal", "rwkv6", "ssm", "transformer"]

@@ -1,0 +1,271 @@
+"""GQA multi-head attention: training/prefill and cached decode paths.
+
+Features covering the assigned architectures: grouped-query attention (any
+kv<=q head ratio), rotary embeddings, optional QKV bias (qwen1.5/2.5),
+optional per-head q/k RMSNorm (qwen3), optional sliding window (mixtral
+native; our long-context variant for dense archs).
+
+Head padding for mesh divisibility happens in the *config* (see
+configs.base.ArchConfig.pad_for_mesh); this module is padding-agnostic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers
+
+Array = jax.Array
+
+
+class AttnParams(NamedTuple):
+    wq: Array           # [d, H*hd]
+    wk: Array           # [d, KV*hd]
+    wv: Array           # [d, KV*hd]
+    wo: Array           # [H*hd, d]
+    bq: Array | None
+    bk: Array | None
+    bv: Array | None
+    q_norm: Array | None  # [hd] (qwen3 qk_norm)
+    k_norm: Array | None
+
+
+def init_attn(rng: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(rng, 4)
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": layers.init_linear(ks[0], (d, h * hd)),
+        "wk": layers.init_linear(ks[1], (d, kv * hd)),
+        "wv": layers.init_linear(ks[2], (d, kv * hd)),
+        "wo": layers.init_linear(ks[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,))
+        p["bk"] = jnp.zeros((kv * hd,))
+        p["bv"] = jnp.zeros((kv * hd,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    # zero the W_o rows of padded q-heads so padding is mathematically inert
+    if cfg.true_num_heads < cfg.num_heads:
+        keep = jnp.arange(h * hd) < cfg.true_num_heads * hd
+        p["wo"] = jnp.where(keep[:, None], p["wo"], 0.0)
+    return p
+
+
+def _project_qkv(p: dict, x: Array, cfg: ArchConfig, positions: Array):
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = layers.rotary_cos_sin(positions, hd, cfg.rope_theta)
+    q = layers.apply_rotary(q, cos, sin)
+    k = layers.apply_rotary(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Array, scale: float) -> Array:
+    """Reference scaled-dot-product attention with GQA head grouping.
+
+    q: [B, S, H, hd]; k/v: [B, T, KV, hd]; mask: [S, T] or [B, S, T] bool.
+
+    k/v stay in their storage dtype and the contractions accumulate in f32
+    via preferred_element_type — casting k/v with .astype would make XLA
+    hoist a full-KV-cache f32 convert out of the decode loop (measured:
+    +29 GB/step entry all-gathers on qwen2.5 decode_32k).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    qg = q.reshape(b, s, kv, group, hd).astype(k.dtype)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None, :, :]
+    else:
+        mask_b = mask[:, None, None, :, :]
+    logits = jnp.where(mask_b, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def blocked_sdpa(q: Array, k: Array, v: Array, mask, scale: float,
+                 block: int = 512, window: int | None = None) -> Array:
+    """Flash-style blocked attention in pure jnp: online softmax over kv
+    blocks via lax.scan — never materializes the [S, T] logits or mask.
+
+    This is the HLO-level twin of the Pallas flash kernel (kernels/
+    flash_attention): on TPU the Pallas kernel is used; under the CPU
+    dry-run this path proves the memory-roofline win (no S^2 buffers) and
+    lowers on every backend. ``mask`` is accepted for signature parity with
+    _sdpa and ignored — masking is structural (causal + optional window).
+    Use ``make_blocked_impl(window=...)`` for SWA archs.
+    """
+    del mask
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    group = h // kv
+    pad_t = (-t) % block
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    pad_s = (-s) % block
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    nk = (t + pad_t) // block
+    nq = (s + pad_s) // block
+
+    # Both axes blocked, like the Pallas kernel's grid: the outer scan walks
+    # q blocks (no carry across them), the inner scan walks kv blocks with a
+    # block-sized online-softmax carry. A full-S carry (earlier version)
+    # re-writes an O(S) accumulator per kv block — measured WORSE than dense
+    # attention at 32k prefill (EXPERIMENTS.md §Perf, iteration A5-refuted).
+    qb = (q.reshape(b, nq, block, kv, group, hd) * scale).astype(jnp.float32)
+    qb = qb.transpose(1, 0, 2, 3, 4, 5)               # [nq, b, BQ, kv, g, hd]
+    kb = k.reshape(b, nk, block, kv, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nk, block, kv, hd).swapaxes(0, 1)
+
+    def q_block(_, inp):
+        iq, qblk = inp
+        q_pos = iq * block + jnp.arange(block)
+
+        def kv_step(carry, kv_inp):
+            m_run, l_run, acc = carry
+            ik, kblk, vblk = kv_inp
+            logits = jnp.einsum("bskgd,btkd->bkgst", qblk, kblk.astype(jnp.float32))
+            k_pos = ik * block + jnp.arange(block)
+            valid = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < t)
+            if window is not None:
+                valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+            # finite sentinel (not -inf): fully-masked blocks must not NaN
+            # the running max / alpha arithmetic
+            logits = jnp.where(valid[None, None, None], logits, -1e30)
+            m_cur = jnp.max(logits, axis=-1)
+            m_new = jnp.maximum(m_run, m_cur)
+            p = jnp.where(valid[None, None, None], jnp.exp(logits - m_new[..., None]), 0.0)
+            alpha = jnp.exp(m_run - m_new)
+            l_new = alpha * l_run + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kv, group, block), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kv, group, block), jnp.float32)
+        a0 = jnp.zeros((b, kv, group, block, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out_blk = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out_blk                            # [b, kv, g, BQ, hd]
+
+    _, out = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    # [nq, b, kv, g, BQ, hd] -> [b, s, h, hd]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * block, h, hd)
+    return out[:, :s].astype(q.dtype)
+
+
+def make_blocked_impl(window: int | None = None, block: int = 512):
+    """attn_impl factory for the blocked (flash-style) jnp path."""
+    def impl(q, k, v, mask, scale):
+        return blocked_sdpa(q, k, v, mask, scale, block=block, window=window)
+    return impl
+
+
+def attention(p: dict, x: Array, cfg: ArchConfig, *,
+              positions: Array | None = None,
+              window: int | None = None,
+              attn_impl=None) -> Array:
+    """Full-sequence causal attention (train / prefill).
+
+    ``attn_impl``: optional drop-in kernel with the _sdpa signature (e.g. the
+    Pallas flash kernel wrapper) — defaults to the jnp reference.
+    """
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :].repeat(b, 0)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    win = window if window is not None else cfg.sliding_window
+    mask = layers.causal_mask(s, s, 0, win)
+    impl = attn_impl or _sdpa
+    out = impl(q, k, v, mask, cfg.head_dim ** -0.5)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def attention_prefill(p: dict, x: Array, cfg: ArchConfig, *,
+                      window: int | None = None,
+                      attn_impl=None) -> tuple[Array, Array, Array]:
+    """Like attention() but also returns the rotary-applied (k, v) for cache
+    construction. k/v: [B, S, KV, hd]."""
+    b, s, d = x.shape
+    positions = jnp.arange(s)[None, :].repeat(b, 0)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    win = window if window is not None else cfg.sliding_window
+    mask = layers.causal_mask(s, s, 0, win)
+    impl = attn_impl or _sdpa
+    out = impl(q, k, v, mask, cfg.head_dim ** -0.5)
+    return out.reshape(b, s, -1) @ p["wo"], k, v
+
+
+class KVCache(NamedTuple):
+    k: Array        # [B, T_max, KV, hd]
+    v: Array        # [B, T_max, KV, hd]
+    length: Array   # scalar int32 — tokens already in the cache
+
+
+def init_cache(batch: int, max_len: int, cfg: ArchConfig, dtype=jnp.bfloat16) -> KVCache:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, max_len, kv, hd), dtype),
+        v=jnp.zeros((batch, max_len, kv, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_attention(p: dict, x: Array, cache: KVCache, cfg: ArchConfig, *,
+                     window: int | None = None) -> tuple[Array, KVCache]:
+    """One-token decode: x [B, 1, d]; returns (out [B, 1, d], updated cache).
+
+    The cache is a ring buffer when ``window`` is set (sliding-window decode):
+    slot = length mod window — attention then only sees the last ``window``
+    tokens, which is what makes `long_500k` feasible for dense archs.
+    """
+    b = x.shape[0]
+    t_max = cache.k.shape[1]
+    pos = cache.length[None, None].repeat(b, 0)  # [B, 1] absolute position
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos)
+
+    win = window if window is not None else cfg.sliding_window
+    if win is not None and t_max <= win:
+        slot = jnp.mod(cache.length, t_max)
+    else:
+        slot = jnp.minimum(cache.length, t_max - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+
+    # valid = slots actually written (and inside the window)
+    idx = jnp.arange(t_max)
+    if win is not None and t_max <= win:
+        valid = idx < jnp.minimum(cache.length + 1, t_max)
+    else:
+        valid = idx <= slot
+        if win is not None:
+            valid = valid & (idx > slot - win)
+    mask = valid[None, :]  # [1(q), T]
+
+    out = _sdpa(q, k, v, mask, cfg.head_dim ** -0.5)
+    out = out.reshape(b, 1, -1) @ p["wo"]
+    return out, KVCache(k=k, v=v, length=cache.length + 1)

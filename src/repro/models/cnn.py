@@ -1,0 +1,130 @@
+"""The paper's two CNNs (Sec. VI-A.2), parameter-count-exact.
+
+* MNIST net  — 5x5 conv(10) / pool / 5x5 conv(20) / pool / FC(50) /
+  dropout(0.5) / FC(10) / log-softmax             = 21,840 params
+* CIFAR net  — 3x3 conv(16) / pool / 3x3 conv(32) / pool / 3x3 conv(64) /
+  pool / dropout(0.25) / FC(10) / log-softmax     = 33,834 params
+
+Functional style: ``init(rng) -> params`` (dict pytree), ``apply(params, x,
+rng=None, train=False) -> log_probs``. NHWC layout.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _conv(x: Array, w: Array, b: Array, padding: str) -> Array:
+    """Convolution as im2col + matmul.
+
+    Deliberate: the federation vmaps model application over per-vehicle
+    *weights*; vmap of conv_general_dilated over weights lowers to
+    batch-group convolutions that XLA CPU compiles pathologically slowly
+    (~minutes). Patch extraction only vmaps over inputs (cheap), and the
+    weight contraction becomes an einsum, which vmaps as a plain batched
+    matmul.
+    """
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (1, 1), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))  # [N, H', W', cin*kh*kw]
+    # conv_general_dilated_patches orders features as (cin, kh, kw)
+    wmat = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    return patches @ wmat + b
+
+
+def _maxpool2(x: Array) -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _glorot(rng, shape):
+    fan_in = int(jnp.prod(jnp.asarray(shape[:-1])))
+    fan_out = int(shape[-1])
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(rng, shape, jnp.float32)
+
+
+def _dropout(x: Array, rate: float, rng: Array | None, train: bool) -> Array:
+    if not train or rng is None or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(rng, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+# ----------------------------------------------------------------- MNIST ----
+
+def mnist_cnn_init(rng: Array) -> dict:
+    ks = jax.random.split(rng, 4)
+    return {
+        "conv1_w": _glorot(ks[0], (5, 5, 1, 10)), "conv1_b": jnp.zeros((10,)),
+        "conv2_w": _glorot(ks[1], (5, 5, 10, 20)), "conv2_b": jnp.zeros((20,)),
+        "fc1_w": _glorot(ks[2], (320, 50)), "fc1_b": jnp.zeros((50,)),
+        "fc2_w": _glorot(ks[3], (50, 10)), "fc2_b": jnp.zeros((10,)),
+    }
+
+
+def mnist_cnn_apply(params: dict, x: Array, rng: Array | None = None, train: bool = False) -> Array:
+    x = jax.nn.relu(_maxpool2(_conv(x, params["conv1_w"], params["conv1_b"], "VALID")))
+    x = jax.nn.relu(_maxpool2(_conv(x, params["conv2_w"], params["conv2_b"], "VALID")))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+    x = _dropout(x, 0.5, rng, train)
+    logits = x @ params["fc2_w"] + params["fc2_b"]
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+# ----------------------------------------------------------------- CIFAR ----
+
+def cifar_cnn_init(rng: Array) -> dict:
+    ks = jax.random.split(rng, 4)
+    return {
+        "conv1_w": _glorot(ks[0], (3, 3, 3, 16)), "conv1_b": jnp.zeros((16,)),
+        "conv2_w": _glorot(ks[1], (3, 3, 16, 32)), "conv2_b": jnp.zeros((32,)),
+        "conv3_w": _glorot(ks[2], (3, 3, 32, 64)), "conv3_b": jnp.zeros((64,)),
+        "fc_w": _glorot(ks[3], (1024, 10)), "fc_b": jnp.zeros((10,)),
+    }
+
+
+def cifar_cnn_apply(params: dict, x: Array, rng: Array | None = None, train: bool = False) -> Array:
+    x = jax.nn.relu(_maxpool2(_conv(x, params["conv1_w"], params["conv1_b"], "SAME")))
+    x = jax.nn.relu(_maxpool2(_conv(x, params["conv2_w"], params["conv2_b"], "SAME")))
+    x = jax.nn.relu(_maxpool2(_conv(x, params["conv3_w"], params["conv3_b"], "SAME")))
+    x = _dropout(x, 0.25, rng, train)
+    x = x.reshape(x.shape[0], -1)
+    logits = x @ params["fc_w"] + params["fc_b"]
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+# ------------------------------------------------------------- task glue ----
+
+def nll_loss(log_probs: Array, labels: Array) -> Array:
+    return -jnp.mean(jnp.take_along_axis(log_probs, labels[:, None], axis=-1))
+
+
+def make_cnn_task(kind: str):
+    """Returns (init_fn, loss_fn, accuracy_fn) for 'mnist' or 'cifar10'."""
+    if kind in ("mnist", "synthetic-mnist"):
+        init_fn, apply_fn = mnist_cnn_init, mnist_cnn_apply
+    elif kind in ("cifar10", "synthetic-cifar10"):
+        init_fn, apply_fn = cifar_cnn_init, cifar_cnn_apply
+    else:
+        raise ValueError(kind)
+
+    def loss_fn(params, x, y, rng):
+        return nll_loss(apply_fn(params, x, rng=rng, train=True), y)
+
+    @jax.jit
+    def accuracy_fn(params, x, y):
+        pred = jnp.argmax(apply_fn(params, x), axis=-1)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+    return init_fn, loss_fn, accuracy_fn
+
+
+def count_params(params) -> int:
+    return sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))

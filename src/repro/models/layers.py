@@ -1,0 +1,98 @@
+"""Shared transformer building blocks (pure JAX, functional params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def rotary_cos_sin(positions: Array, head_dim: int, theta: float = 1e4) -> tuple[Array, Array]:
+    """cos/sin tables for the given integer positions. Returns [..., head_dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rotary(x: Array, cos: Array, sin: Array) -> Array:
+    """x: [..., S, H, hd]; cos/sin: [..., S, hd/2] (broadcast over heads)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jax.nn.silu(x @ w_gate)
+    u = x @ w_up
+    return (g * u) @ w_down
+
+
+def gelu_mlp(x: Array, w_up: Array, b_up: Array, w_down: Array, b_down: Array) -> Array:
+    return jax.nn.gelu(x @ w_up + b_up) @ w_down + b_down
+
+
+def embed(tokens: Array, table: Array) -> Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: Array, table: Array, true_vocab: int | None = None) -> Array:
+    """Project to logits; mask padded vocab ids to -inf."""
+    logits = x @ table
+    if true_vocab is not None and true_vocab < table.shape[-1]:
+        mask = jnp.arange(table.shape[-1]) < true_vocab
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset: Array | int = 0,
+                window: int | None = None) -> Array:
+    """[q_len, kv_len] boolean mask. True = attend.
+
+    ``q_offset`` is the absolute position of query 0 relative to kv 0 (for
+    decode with cache, q_offset = cache length). ``window`` keeps only the
+    trailing ``window`` keys (sliding-window attention).
+    """
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    return mask
+
+
+def init_linear(rng: Array, shape: tuple[int, ...], scale: float | None = None) -> Array:
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (scale * jax.random.normal(rng, shape, jnp.float32))
+
+
+def cross_entropy(logits: Array, labels: Array, ignore_id: int = -1) -> Array:
+    """Mean token cross-entropy, skipping ``ignore_id`` positions."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    valid = labels != ignore_id
+    safe = jnp.where(valid, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts MLP: top-k router + two execution paths.
+
+* ``dense`` — compute every expert on every token, combine with router
+  weights. Simple, partitions perfectly under pjit (expert dim sharded or
+  d_ff sharded), differentiable; wastes E/top_k x FLOPs. This is the
+  baseline the roofline's MODEL_FLOPS/HLO_FLOPS ratio exposes.
+* ``ragged`` — sort token-assignments by expert and run grouped matmuls via
+  ``jax.lax.ragged_dot`` (dropless, no capacity). The perf-pass path.
+
+Router: softmax over expert logits, top-k selection, weights renormalized
+over the selected experts (Mixtral convention), plus the standard
+load-balance auxiliary loss (Switch/GShard).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers
+
+Array = jax.Array
+
+
+def init_moe(rng: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(rng, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": layers.init_linear(ks[0], (d, e)),
+        "w_gate": layers.init_linear(ks[1], (e, d, f)),
+        "w_up": layers.init_linear(ks[2], (e, d, f)),
+        "w_down": layers.init_linear(ks[3], (e, f, d)),
+    }
+
+
+def router_topk(logits: Array, top_k: int) -> tuple[Array, Array, Array]:
+    """Returns (weights [N, k], indices [N, k], aux_loss scalar)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # load-balance loss: E * sum_e f_e * p_e
+    e = logits.shape[-1]
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)          # [N, k, E]
+    frac_routed = jnp.mean(jnp.sum(onehot, axis=1), axis=0)     # [E]
+    mean_prob = jnp.mean(probs, axis=0)                         # [E]
+    aux = e * jnp.sum(frac_routed * mean_prob)
+    return weights.astype(logits.dtype), idx, aux
+
+
+def moe_dense(p: dict, x: Array, cfg: ArchConfig) -> tuple[Array, Array]:
+    """Dense-compute path. x: [N, d] -> ([N, d], aux_loss).
+
+    The router combine is folded into the down-projection contraction:
+
+        out[n,d] = sum_e c[n,e] * sum_f h[e,n,f] Wd[e,f,d]
+                 = sum_{e,f} (c[n,e] * h[e,n,f]) Wd[e,f,d]
+
+    so under tensor parallelism the cross-shard reduction is one [N, d]
+    all-reduce instead of an [E, N, d] one (measured: 8x fewer collective
+    bytes per MoE layer on mixtral train_4k) and the [E, N, d] all-expert
+    output tensor is never materialized.
+    """
+    weights, idx, aux = router_topk(x @ p["router"], cfg.top_k)
+    onehot = jax.nn.one_hot(idx, cfg.num_experts, dtype=x.dtype)  # [N, k, E]
+    combine = jnp.einsum("nk,nke->ne", weights, onehot)           # [N, E]
+    g = jnp.einsum("nd,edf->enf", x, p["w_gate"])
+    u = jnp.einsum("nd,edf->enf", x, p["w_up"])
+    h = (jax.nn.silu(g) * u) * combine.T[:, :, None]              # [E, N, f]
+    out = jnp.einsum("enf,efd->nd", h, p["w_down"])
+    return out, aux
+
+
+def moe_ragged(p: dict, x: Array, cfg: ArchConfig) -> tuple[Array, Array]:
+    """Dropless sorted-dispatch path via ragged grouped matmul.
+
+    Static shapes: N*k assignments are sorted by expert id; group_sizes feeds
+    ragged_dot; outputs are scatter-added back per token.
+    """
+    n, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    weights, idx, aux = router_topk(x @ p["router"], k)
+
+    flat_expert = idx.reshape(-1)                                # [N*k]
+    flat_token = jnp.repeat(jnp.arange(n), k)                    # [N*k]
+    flat_weight = weights.reshape(-1)                            # [N*k]
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_weight = flat_weight[order]
+
+    xs = x[sorted_token]                                         # [N*k, d]
+    group_sizes = jnp.bincount(sorted_expert, length=e).astype(jnp.int32)
+
+    g = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)
+    u = jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+    y = jax.lax.ragged_dot(jax.nn.silu(g) * u, p["w_down"], group_sizes)
+
+    out = jnp.zeros_like(x).at[sorted_token].add(y * sorted_weight[:, None])
+    return out, aux
+
+
+def moe_ffn(p: dict, x: Array, cfg: ArchConfig) -> tuple[Array, Array]:
+    """Dispatch on cfg.moe_impl. x may be [B, S, d] or [N, d]."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    fn = moe_ragged if cfg.moe_impl == "ragged" else moe_dense
+    out, aux = fn(p, flat, cfg)
+    return out.reshape(shape), aux

@@ -1,0 +1,41 @@
+"""Modality frontend STUBS for the [vlm] and [audio] architectures.
+
+Per the assignment, the transformer backbone is real and the modality
+frontend (ViT vision encoder / EnCodec conv codec) is stubbed:
+``frontend_embeddings`` deterministically maps raw-ish inputs to patch/frame
+embeddings of the right shape, and ``input_specs`` (launch/shapes.py) carries
+ShapeDtypeStructs for them. The stub is smooth + input-dependent so gradients
+and smoke tests behave like a real frontend's outputs would.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+Array = jax.Array
+
+
+def frontend_embeddings(cfg: ArchConfig, raw: Array) -> Array:
+    """Map raw frontend inputs to [B, frontend_tokens, d_model] embeddings.
+
+    raw: [B, frontend_tokens, F] arbitrary feature dim (e.g. flattened pixels
+    per patch / mel bins per frame). A fixed random projection (seeded from
+    the arch name) stands in for the trained encoder.
+    """
+    b, t, f = raw.shape
+    assert t == cfg.frontend_tokens, (t, cfg.frontend_tokens)
+    seed = abs(hash(cfg.name)) % (2 ** 31)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (f, cfg.d_model), jnp.float32)
+    emb = raw.astype(jnp.float32) @ (w / jnp.sqrt(f))
+    return jnp.tanh(emb)
+
+
+def frontend_feature_dim(cfg: ArchConfig) -> int:
+    """Feature dim of the raw frontend input the stub consumes."""
+    if cfg.family == "vlm":
+        return 14 * 14 * 3      # one ViT patch of pixels
+    if cfg.family == "audio":
+        return 128              # mel bins per frame
+    raise ValueError(f"{cfg.name} has no frontend")

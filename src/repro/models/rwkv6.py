@@ -1,0 +1,213 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay, + channel-mix. Chunked-parallel training form and O(1)
+recurrent decode form.
+
+Per head (head_dim = D), with receptance r_t, key k_t, value v_t, decay
+w_t in (0,1)^D (data-dependent) and per-channel bonus u:
+
+    S_t   = diag(w_t) S_{t-1} + k_t (x) v_t          (state, [D, D])
+    y_t   = r_t @ S_{t-1} + (r_t * u * k_t).sum() v_t
+
+Chunked training (chunk C): pairwise within-chunk decay matrices are built
+from cumulative log-decays as exp(L_{t-1} - L_a) <= 1 for a < t, which is
+numerically safe for any decay magnitude (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers
+
+Array = jax.Array
+
+LORA_R = 32  # low-rank size for the data-dependent decay/mix projections
+
+
+def num_heads(cfg: ArchConfig) -> int:
+    """WKV head count. cfg.num_heads may exceed d_model/head_dim when padded
+    for mesh divisibility (e.g. 40 -> 48 at 16-way model parallel); the inner
+    width is then num_heads * head_dim != d_model and the padded heads are
+    inert (zero wo rows)."""
+    return cfg.num_heads or (cfg.d_model // cfg.head_dim)
+
+
+def inner_width(cfg: ArchConfig) -> int:
+    return num_heads(cfg) * cfg.head_dim
+
+
+def init_time_mix(rng: Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h = num_heads(cfg)
+    w = inner_width(cfg)
+    ks = jax.random.split(rng, 12)
+    p = {
+        # token-shift interpolation factors for r, k, v, w, g
+        "mix_mu": 0.5 * jnp.ones((5, d)),
+        "mix_w1": layers.init_linear(ks[0], (d, 5 * LORA_R), scale=0.01),
+        "mix_w2": layers.init_linear(ks[1], (5, LORA_R, d), scale=0.01),
+        # projections (inner width w = H * head_dim, == d unless heads padded)
+        "wr": layers.init_linear(ks[2], (d, w)),
+        "wk": layers.init_linear(ks[3], (d, w)),
+        "wv": layers.init_linear(ks[4], (d, w)),
+        "wg": layers.init_linear(ks[5], (d, w)),
+        "wo": layers.init_linear(ks[6], (w, d)),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x w1) w2))
+        "decay_w0": -6.0 + jnp.zeros((w,)),
+        "decay_w1": layers.init_linear(ks[7], (d, 2 * LORA_R), scale=0.01),
+        "decay_w2": layers.init_linear(ks[8], (2 * LORA_R, w), scale=0.01),
+        "bonus_u": layers.init_linear(ks[9], (h, cfg.head_dim), scale=0.5),
+        "ln_x": jnp.ones((w,)),  # per-head group-norm weight on the output
+    }
+    true_h = cfg.true_num_heads or (cfg.d_model // cfg.head_dim)
+    if true_h < h:  # zero wo rows of padded heads -> padding is inert
+        keep = jnp.arange(w) < true_h * cfg.head_dim
+        p["wo"] = jnp.where(keep[:, None], p["wo"], 0.0)
+    return p
+
+
+def init_channel_mix(rng: Array, cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "mix_k": 0.5 * jnp.ones((d,)),
+        "mix_r": 0.5 * jnp.ones((d,)),
+        "wk": layers.init_linear(ks[0], (d, f)),
+        "wv": layers.init_linear(ks[1], (f, d)),
+        "wr": layers.init_linear(ks[2], (d, d)),
+    }
+
+
+def _token_shift(x: Array, prev: Array) -> Array:
+    """shift(x)_t = x_{t-1}; position 0 uses ``prev`` (carry across chunks)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p: dict, x: Array, xx: Array):
+    """RWKV6 data-dependent interpolation producing the 5 mixed inputs."""
+    delta = xx - x
+    base = x[:, :, None, :] + delta[:, :, None, :] * p["mix_mu"][None, None]  # [B,S,5,d]
+    lora = jnp.einsum("bsd,dr->bsr", x + 0.5 * delta, p["mix_w1"])
+    lora = jnp.tanh(lora.reshape(x.shape[0], x.shape[1], 5, LORA_R))
+    adj = jnp.einsum("bsmr,mrd->bsmd", lora, p["mix_w2"])
+    mixed = base + delta[:, :, None, :] * adj
+    return [mixed[:, :, i, :] for i in range(5)]
+
+
+def _wkv_chunk(r, k, v, logw, u, state):
+    """One chunk of the WKV recurrence, parallel within the chunk.
+
+    r,k,v: [B, C, H, D]; logw: [B, C, H, D] (log decay, <= 0);
+    u: [H, D]; state: [B, H, D, D]. Returns (y [B, C, H, D], new state).
+    """
+    b, c, h, dd = r.shape
+    lw = jnp.cumsum(logw, axis=1)                     # L_t = sum_{i<=t} log w_i
+    lw_prev = lw - logw                               # L_{t-1}
+
+    # cross-chunk: y_cross_t = (r_t * exp(L_{t-1})) @ S_0
+    r_dec = r * jnp.exp(lw_prev)
+    y_cross = jnp.einsum("bchd,bhde->bche", r_dec, state)
+
+    # within-chunk: pairwise decay exp(L_{t-1} - L_a) for a < t
+    att = jnp.einsum("bchd,bahd->bhca", r_dec, k * jnp.exp(-lw))
+    pos_q = jnp.arange(c)[:, None]
+    pos_k = jnp.arange(c)[None, :]
+    att = jnp.where((pos_k < pos_q)[None, None], att, 0.0)
+    # diagonal bonus term: (r_t * u * k_t) summed over channels
+    diag = jnp.einsum("bchd,hd,bchd->bch", r, u, k)
+    att = att + jnp.einsum("bch,ca->bhca", diag, jnp.eye(c, dtype=att.dtype))
+    y_intra = jnp.einsum("bhca,bahe->bche", att, v)
+
+    # state update: S_C = diag(exp(L_C)) S_0 + sum_a exp(L_C - L_a) k_a (x) v_a
+    lw_end = lw[:, -1:, :, :]                          # [B,1,H,D]
+    k_dec = k * jnp.exp(lw_end - lw)
+    new_state = state * jnp.exp(lw_end[:, 0])[..., None] + jnp.einsum(
+        "bahd,bahe->bhde", k_dec, v)
+    return y_cross + y_intra, new_state
+
+
+def time_mix(p: dict, x: Array, cfg: ArchConfig, state: dict | None = None,
+             chunk: int = 64) -> tuple[Array, dict]:
+    """Full-sequence time-mix. state carries {shift [B,d], wkv [B,H,D,D]}."""
+    b, s, d = x.shape
+    h, dd = num_heads(cfg), cfg.head_dim
+    if state is None:
+        state = {"shift": jnp.zeros((b, d), x.dtype),
+                 "wkv": jnp.zeros((b, h, dd, dd), jnp.float32)}
+
+    xx = _token_shift(x, state["shift"])
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r = (xr @ p["wr"]).reshape(b, s, h, dd)
+    k = (xk @ p["wk"]).reshape(b, s, h, dd)
+    v = (xv @ p["wv"]).reshape(b, s, h, dd)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = -jnp.exp(p["decay_w0"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"])
+    logw = logw.reshape(b, s, h, dd).astype(jnp.float32)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    pad = (-s) % chunk
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r32, k32, v32, logw = padf(r32), padf(k32), padf(v32), padf(logw)
+    nchunk = (s + pad) // chunk
+
+    def scan_fn(wkv, inputs):
+        rc, kc, vc, lwc = inputs
+        y, wkv = _wkv_chunk(rc, kc, vc, lwc, p["bonus_u"], wkv)
+        return wkv, y
+
+    reshape = lambda t: t.reshape(b, nchunk, chunk, h, dd).swapaxes(0, 1)
+    wkv, ys = jax.lax.scan(scan_fn, state["wkv"],
+                           (reshape(r32), reshape(k32), reshape(v32), reshape(logw)))
+    y = ys.swapaxes(0, 1).reshape(b, nchunk * chunk, h, dd)[:, :s]
+
+    # per-head group norm, gate, output proj (inner width w = H*hd)
+    y = _head_group_norm(y, p["ln_x"], cfg.norm_eps)
+    out = (y.astype(x.dtype) * g) @ p["wo"]
+    new_state = {"shift": x[:, -1, :], "wkv": wkv}
+    return out, new_state
+
+
+def _head_group_norm(y: Array, weight: Array, eps: float) -> Array:
+    """GroupNorm over each head's channels (RWKV's ln_x)."""
+    b, s, h, dd = y.shape
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    return yn.reshape(b, s, h * dd) * weight
+
+
+def time_mix_decode(p: dict, x: Array, cfg: ArchConfig, state: dict) -> tuple[Array, dict]:
+    """Single-token recurrent step. x: [B, 1, d]."""
+    b, _, d = x.shape
+    h, dd = num_heads(cfg), cfg.head_dim
+    xx = state["shift"][:, None, :]
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r = (xr @ p["wr"]).reshape(b, h, dd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(b, h, dd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(b, h, dd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])[:, 0]
+    logw = -jnp.exp(p["decay_w0"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"])
+    w = jnp.exp(logw.reshape(b, h, dd).astype(jnp.float32))
+
+    s_prev = state["wkv"]                                  # [B, H, D, D]
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    y = jnp.einsum("bhd,bhde->bhe", r, s_prev) + jnp.einsum(
+        "bhd,hd,bhde->bhe", r, p["bonus_u"], kv)
+    new_wkv = w[..., None] * s_prev + kv
+
+    y = _head_group_norm(y[:, None].reshape(b, 1, h, dd), p["ln_x"], cfg.norm_eps)
+    out = (y.astype(x.dtype) * g[:, None]) @ p["wo"]
+    return out, {"shift": x[:, -1, :], "wkv": new_wkv}
+
+
+def channel_mix(p: dict, x: Array, state_shift: Array) -> tuple[Array, Array]:
+    """RWKV channel-mix (squared-relu MLP with token-shift). x: [B,S,d]."""
+    xx = _token_shift(x, state_shift)
+    xk = x + (xx - x) * p["mix_k"]
+    xr = x + (xx - x) * p["mix_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1, :]

@@ -1,0 +1,136 @@
+"""Selective SSM (Mamba-style) branch used by the Hymba hybrid block
+(arXiv:2411.13676): depthwise causal conv + data-dependent (selective)
+state-space recurrence, chunked-exact for training, O(1) state for decode.
+
+Per channel d and state dim n (ssm_state = N, typically 16):
+
+    h_t[d,n] = exp(dt_t[d] * A[d,n]) h_{t-1}[d,n] + dt_t[d] B_t[n] x_t[d]
+    y_t[d]   = sum_n C_t[n] h_t[d,n] + D[d] x_t[d]
+
+Training runs a scan over chunks; inside a chunk the recurrence is solved
+with ``jax.lax.associative_scan`` (exact, numerically stable — no explicit
+inverse-decay factors).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import layers
+
+Array = jax.Array
+
+CONV_K = 4      # depthwise causal conv width (mamba default)
+DT_RANK_DIV = 16
+
+
+def init_ssm(rng: Array, cfg: ArchConfig) -> dict:
+    d = cfg.d_model          # d_inner == d_model for the hybrid branch
+    n = cfg.ssm_state
+    dt_rank = max(1, d // DT_RANK_DIV)
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": layers.init_linear(ks[0], (d, 2 * d)),       # x and gate z
+        "conv_w": 0.1 * jax.random.normal(ks[1], (CONV_K, d), jnp.float32),
+        "conv_b": jnp.zeros((d,)),
+        "x_proj": layers.init_linear(ks[2], (d, dt_rank + 2 * n)),
+        "dt_proj": layers.init_linear(ks[3], (dt_rank, d)),
+        "dt_bias": jnp.log(jnp.expm1(0.01)) * jnp.ones((d,)),   # softplus^-1(0.01)
+        "log_a": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (d, 1))),
+        "d_skip": jnp.ones((d,)),
+        "out_proj": layers.init_linear(ks[4], (d, d)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Array) -> tuple[Array, Array]:
+    """Depthwise causal conv1d. x: [B,S,d]; state: [B, K-1, d] (left context)."""
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(CONV_K))
+    return out + b, xp[:, -(CONV_K - 1):, :]
+
+
+def _selective_terms(p: dict, x: Array, cfg: ArchConfig):
+    """Compute (decay log a_t [B,S,d,N], input u_t [B,S,d,N], C_t [B,S,N])."""
+    n = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    proj = x @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])  # [B,S,d]
+    bmat = proj[..., dt_rank:dt_rank + n]                                    # [B,S,N]
+    cmat = proj[..., dt_rank + n:]                                           # [B,S,N]
+    a = -jnp.exp(p["log_a"])                                                 # [d,N]
+    log_decay = dt[..., None] * a                                            # [B,S,d,N]
+    u = (dt * x)[..., None] * bmat[..., None, :]                             # [B,S,d,N]
+    return log_decay, u, cmat
+
+
+def _scan_chunk(h0: Array, log_decay: Array, u: Array) -> tuple[Array, Array]:
+    """Exact in-chunk recurrence via associative scan over time axis 1.
+
+    h0: [B,d,N]; log_decay/u: [B,C,d,N]. Returns (h_all [B,C,d,N], h_last).
+    """
+    decay = jnp.exp(log_decay)
+    # fold the carried state into the first input
+    u = u.at[:, 0].add(decay[:, 0] * h0)
+
+    def combine(a, b):
+        (da, ua), (db, ub) = a, b
+        return da * db, db * ua + ub
+
+    _, h_all = jax.lax.associative_scan(combine, (decay, u), axis=1)
+    return h_all, h_all[:, -1]
+
+
+def ssm_forward(p: dict, x: Array, cfg: ArchConfig, state: dict | None = None,
+                chunk: int = 128) -> tuple[Array, dict]:
+    """Full-sequence selective SSM. x: [B,S,d]."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    if state is None:
+        state = {"conv": jnp.zeros((b, CONV_K - 1, d), x.dtype),
+                 "h": jnp.zeros((b, d, n), jnp.float32)}
+
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = _causal_conv(xs, p["conv_w"], p["conv_b"], state["conv"])
+    xs = jax.nn.silu(xs)
+
+    log_decay, u, cmat = _selective_terms(p, xs, cfg)
+    log_decay = log_decay.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+
+    pad = (-s) % chunk
+    if pad:
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nchunk = (s + pad) // chunk
+    resh = lambda t: t.reshape(b, nchunk, chunk, d, n).swapaxes(0, 1)
+
+    def scan_fn(h, inputs):
+        ld, uu = inputs
+        h_all, h_last = _scan_chunk(h, ld, uu)
+        return h_last, h_all
+
+    h_final, h_seq = jax.lax.scan(scan_fn, state["h"], (resh(log_decay), resh(u)))
+    h_seq = h_seq.swapaxes(0, 1).reshape(b, nchunk * chunk, d, n)[:, :s]
+
+    y = jnp.einsum("bsdn,bsn->bsd", h_seq, cmat.astype(jnp.float32))
+    y = y.astype(x.dtype) + p["d_skip"] * xs
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"conv": conv_state, "h": h_final}
+
+
+def ssm_decode(p: dict, x: Array, cfg: ArchConfig, state: dict) -> tuple[Array, dict]:
+    """Single-token step. x: [B,1,d]."""
+    b, _, d = x.shape
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs_full, conv_state = _causal_conv(xs, p["conv_w"], p["conv_b"], state["conv"])
+    xs_act = jax.nn.silu(xs_full)
+
+    log_decay, u, cmat = _selective_terms(p, xs_act, cfg)
+    h = jnp.exp(log_decay[:, 0].astype(jnp.float32)) * state["h"] + u[:, 0].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32))[:, None, :]
+    y = y.astype(x.dtype) + p["d_skip"] * xs_act
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,363 @@
+"""Decoder assembly for all assigned architecture families.
+
+Scan-over-layers: per-layer params are stacked on a leading [L, ...] axis and
+the layer stack runs under ``jax.lax.scan`` — HLO size and compile time stay
+bounded for 88-layer archs lowered at 512 devices (DESIGN.md §5).
+
+Families:
+  dense / vlm / audio : pre-norm GQA attention + pre-norm SwiGLU MLP
+  moe                 : pre-norm GQA attention + pre-norm MoE FFN
+  ssm (rwkv6)         : time-mix + channel-mix (LayerNorm, token-shift)
+  hybrid (hymba)      : parallel {attention, selective-SSM} branches,
+                        per-branch norm, averaged; + SwiGLU MLP
+
+VLM/audio accept optional ``prefix_embeds`` — precomputed patch/frame
+embeddings from the stub frontend — concatenated before the token embeddings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention, layers, moe, rwkv6, ssm
+
+Array = jax.Array
+PyTree = Any
+
+
+# ------------------------------------------------------------- init ---------
+
+def _init_block(rng: Array, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(rng, 8)
+    p: dict = {"norm1": jnp.ones((cfg.d_model,)), "norm2": jnp.ones((cfg.d_model,))}
+    if cfg.family == "ssm":  # rwkv6: LayerNorm has bias
+        p["norm1_b"] = jnp.zeros((cfg.d_model,))
+        p["norm2_b"] = jnp.zeros((cfg.d_model,))
+        p["time_mix"] = rwkv6.init_time_mix(ks[0], cfg)
+        p["channel_mix"] = rwkv6.init_channel_mix(ks[1], cfg)
+        return p
+    if cfg.hybrid:
+        p["attn"] = attention.init_attn(ks[0], cfg)
+        p["ssm"] = ssm.init_ssm(ks[1], cfg)
+        p["branch_norm_attn"] = jnp.ones((cfg.d_model,))
+        p["branch_norm_ssm"] = jnp.ones((cfg.d_model,))
+    else:
+        p["attn"] = attention.init_attn(ks[0], cfg)
+    if cfg.is_moe:
+        p["moe"] = moe.init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = {
+            "w_gate": layers.init_linear(ks[3], (cfg.d_model, cfg.d_ff)),
+            "w_up": layers.init_linear(ks[4], (cfg.d_model, cfg.d_ff)),
+            "w_down": layers.init_linear(ks[5], (cfg.d_ff, cfg.d_model)),
+        }
+    return p
+
+
+def init_params(rng: Array, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)
+    params = {
+        "embed": 0.02 * jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,)),
+    }
+    if cfg.family == "ssm":
+        params["final_norm_b"] = jnp.zeros((cfg.d_model,))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.init_linear(k_head, (cfg.d_model, cfg.vocab_size), scale=0.02)
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), params)
+
+
+# ---------------------------------------------------------- block fwd -------
+
+def _block_forward(p: dict, x: Array, cfg: ArchConfig, *,
+                   window: int | None, attn_impl=None) -> tuple[Array, Array]:
+    """Full-sequence block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h = layers.layer_norm(x, p["norm1"], p["norm1_b"], cfg.norm_eps)
+        tm, _ = rwkv6.time_mix(p["time_mix"], h, cfg)
+        x = x + tm
+        h = layers.layer_norm(x, p["norm2"], p["norm2_b"], cfg.norm_eps)
+        cm, _ = rwkv6.channel_mix(p["channel_mix"], h, jnp.zeros_like(h[:, 0]))
+        return x + cm, aux
+
+    h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if cfg.hybrid:
+        a = attention.attention(p["attn"], h, cfg, window=window, attn_impl=attn_impl)
+        s, _ = ssm.ssm_forward(p["ssm"], h, cfg)
+        mixed = 0.5 * (layers.rms_norm(a, p["branch_norm_attn"], cfg.norm_eps)
+                       + layers.rms_norm(s, p["branch_norm_ssm"], cfg.norm_eps))
+        x = x + mixed
+    else:
+        x = x + attention.attention(p["attn"], h, cfg, window=window, attn_impl=attn_impl)
+
+    h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        out, aux = moe.moe_ffn(p["moe"], h, cfg)
+        x = x + out
+    else:
+        x = x + layers.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x, aux
+
+
+# --------------------------------------------------------- forward ----------
+
+def forward(params: dict, tokens: Array, cfg: ArchConfig, *,
+            prefix_embeds: Array | None = None,
+            window: int | None = None,
+            attn_impl=None,
+            remat: bool = False) -> Array:
+    """Train / prefill forward. Returns logits [B, S(+P), V]."""
+    x = layers.embed(tokens, params["embed"])
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+
+    block = partial(_block_forward, cfg=cfg, window=window, attn_impl=attn_impl)
+    if remat:
+        block = jax.checkpoint(block)
+
+    def scan_fn(carry, layer_params):
+        x, aux = carry
+        x, aux_l = block(layer_params, x)
+        return (x, aux + aux_l), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+
+    if cfg.family == "ssm":
+        x = layers.layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    else:
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(x, head, cfg.true_vocab_size)
+    # stash aux loss on the logits via a custom pair? Keep API simple: callers
+    # wanting the load-balance loss use forward_with_aux.
+    return logits
+
+
+def forward_with_aux(params: dict, tokens: Array, cfg: ArchConfig, **kw) -> tuple[Array, Array]:
+    """Like forward() but also returns the accumulated MoE aux loss."""
+    x = layers.embed(tokens, params["embed"])
+    prefix = kw.get("prefix_embeds")
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    block = partial(_block_forward, cfg=cfg, window=kw.get("window"),
+                    attn_impl=kw.get("attn_impl"))
+    if kw.get("remat"):
+        block = jax.checkpoint(block)
+
+    def scan_fn(carry, layer_params):
+        x, aux = carry
+        x, aux_l = block(layer_params, x)
+        return (x, aux + aux_l), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    if cfg.family == "ssm":
+        x = layers.layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    else:
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return layers.unembed(x, head, cfg.true_vocab_size), aux
+
+
+# ---------------------------------------------------------- prefill ---------
+
+def _block_prefill(p: dict, x: Array, cfg: ArchConfig, *, window: int | None,
+                   cache_dtype, attn_impl=None) -> tuple[Array, dict]:
+    """Full-sequence block that also emits the layer's recurrent state."""
+    state: dict = {}
+    b, s, _ = x.shape
+    if cfg.family == "ssm":
+        h = layers.layer_norm(x, p["norm1"], p["norm1_b"], cfg.norm_eps)
+        tm, tm_state = rwkv6.time_mix(p["time_mix"], h, cfg)
+        x = x + tm
+        h = layers.layer_norm(x, p["norm2"], p["norm2_b"], cfg.norm_eps)
+        cm, cm_shift = rwkv6.channel_mix(p["channel_mix"], h, jnp.zeros_like(h[:, 0]))
+        state["rwkv"] = {"shift": tm_state["shift"], "wkv": tm_state["wkv"],
+                         "cm_shift": cm_shift}
+        return x + cm, state
+
+    h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    win = window if window is not None else cfg.sliding_window
+    if cfg.hybrid:
+        a, k, v = attention.attention_prefill(p["attn"], h, cfg, window=win,
+                                              attn_impl=attn_impl)
+        sout, sm_state = ssm.ssm_forward(p["ssm"], h, cfg)
+        mixed = 0.5 * (layers.rms_norm(a, p["branch_norm_attn"], cfg.norm_eps)
+                       + layers.rms_norm(sout, p["branch_norm_ssm"], cfg.norm_eps))
+        x = x + mixed
+        state["ssm"] = sm_state
+    else:
+        a, k, v = attention.attention_prefill(p["attn"], h, cfg, window=win,
+                                              attn_impl=attn_impl)
+        x = x + a
+    # cache: full sequence, or ring-aligned last `win` positions
+    if win is not None and s > win:
+        r = s % win
+        k = jnp.roll(k[:, s - win:], r, axis=1)
+        v = jnp.roll(v[:, s - win:], r, axis=1)
+    state["kv"] = attention.KVCache(
+        k=k.astype(cache_dtype), v=v.astype(cache_dtype),
+        length=jnp.asarray(s, jnp.int32))
+
+    h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        out, _ = moe.moe_ffn(p["moe"], h, cfg)
+        x = x + out
+    else:
+        x = x + layers.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x, state
+
+
+def prefill(params: dict, tokens: Array, cfg: ArchConfig, *,
+            prefix_embeds: Array | None = None,
+            window: int | None = None,
+            attn_impl=None,
+            cache_dtype=jnp.bfloat16) -> tuple[Array, "DecodeState"]:
+    """Prefill: returns (last-position logits [B, V], DecodeState)."""
+    x = layers.embed(tokens, params["embed"])
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    s_total = x.shape[1]
+
+    def scan_fn(x, layer_params):
+        x, state = _block_prefill(layer_params, x, cfg, window=window,
+                                  cache_dtype=cache_dtype, attn_impl=attn_impl)
+        return x, state
+
+    x, states = jax.lax.scan(scan_fn, x, params["blocks"])
+
+    if cfg.family == "ssm":
+        x = layers.layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    else:
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    last_logits = layers.unembed(x[:, -1], head, cfg.true_vocab_size)
+
+    state = DecodeState(
+        kv=states.get("kv"), rwkv=states.get("rwkv"), ssm=states.get("ssm"),
+        position=jnp.asarray(s_total, jnp.int32))
+    return last_logits, state
+
+
+# ----------------------------------------------------------- decode ---------
+
+class DecodeState(NamedTuple):
+    """Per-layer recurrent state stacked on a leading [L, ...] axis."""
+    kv: Any          # attention.KVCache leaves [L, B, T, kv, hd] or None
+    rwkv: Any        # {"shift", "wkv", "cm_shift"} or None
+    ssm: Any         # {"conv", "h"} or None
+    position: Array  # scalar int32
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16) -> DecodeState:
+    L = cfg.num_layers
+    kv = rk = sm = None
+    if not cfg.attn_free:
+        eff_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        kv = attention.KVCache(
+            k=jnp.zeros((L, batch, eff_len, cfg.num_kv_heads, cfg.head_dim), cache_dtype),
+            v=jnp.zeros((L, batch, eff_len, cfg.num_kv_heads, cfg.head_dim), cache_dtype),
+            length=jnp.zeros((L,), jnp.int32),
+        )
+    if cfg.family == "ssm":
+        h = rwkv6.num_heads(cfg)
+        rk = {
+            "shift": jnp.zeros((L, batch, cfg.d_model), jnp.float32),
+            "wkv": jnp.zeros((L, batch, h, cfg.head_dim, cfg.head_dim), jnp.float32),
+            "cm_shift": jnp.zeros((L, batch, cfg.d_model), jnp.float32),
+        }
+    if cfg.hybrid:
+        sm = {
+            "conv": jnp.zeros((L, batch, ssm.CONV_K - 1, cfg.d_model), jnp.float32),
+            "h": jnp.zeros((L, batch, cfg.d_model, cfg.ssm_state), jnp.float32),
+        }
+    return DecodeState(kv=kv, rwkv=rk, ssm=sm, position=jnp.zeros((), jnp.int32))
+
+
+def _block_decode(p: dict, x: Array, cfg: ArchConfig, carry: dict) -> tuple[Array, dict]:
+    new_carry = {}
+    if cfg.family == "ssm":
+        h = layers.layer_norm(x, p["norm1"], p["norm1_b"], cfg.norm_eps)
+        tm, rk = rwkv6.time_mix_decode(
+            p["time_mix"], h, cfg,
+            {"shift": carry["rwkv"]["shift"], "wkv": carry["rwkv"]["wkv"]})
+        x = x + tm
+        h = layers.layer_norm(x, p["norm2"], p["norm2_b"], cfg.norm_eps)
+        cm, cm_shift = rwkv6.channel_mix(p["channel_mix"], h, carry["rwkv"]["cm_shift"])
+        new_carry["rwkv"] = {"shift": rk["shift"], "wkv": rk["wkv"], "cm_shift": cm_shift}
+        return x + cm, new_carry
+
+    h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if cfg.hybrid:
+        a, kv = attention.decode_attention(p["attn"], h, carry["kv"], cfg)
+        s, sm = ssm.ssm_decode(p["ssm"], h, cfg, carry["ssm"])
+        mixed = 0.5 * (layers.rms_norm(a, p["branch_norm_attn"], cfg.norm_eps)
+                       + layers.rms_norm(s, p["branch_norm_ssm"], cfg.norm_eps))
+        x = x + mixed
+        new_carry["kv"], new_carry["ssm"] = kv, sm
+    else:
+        a, kv = attention.decode_attention(p["attn"], h, carry["kv"], cfg)
+        x = x + a
+        new_carry["kv"] = kv
+
+    h = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.is_moe:
+        out, _ = moe.moe_ffn(p["moe"], h, cfg)
+        x = x + out
+    else:
+        x = x + layers.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x, new_carry
+
+
+def decode_step(params: dict, tokens: Array, state: DecodeState,
+                cfg: ArchConfig) -> tuple[Array, DecodeState]:
+    """One decode step: tokens [B, 1] -> logits [B, V], updated state."""
+    x = layers.embed(tokens, params["embed"])
+
+    def scan_fn(x, inputs):
+        layer_params, carry = inputs
+        x, new_carry = _block_decode(layer_params, x, cfg, carry)
+        return x, new_carry
+
+    carries = {}
+    if state.kv is not None:
+        carries["kv"] = state.kv
+    if state.rwkv is not None:
+        carries["rwkv"] = state.rwkv
+    if state.ssm is not None:
+        carries["ssm"] = state.ssm
+
+    x, new_carries = jax.lax.scan(scan_fn, x, (params["blocks"], carries))
+
+    if cfg.family == "ssm":
+        x = layers.layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    else:
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(x[:, 0], head, cfg.true_vocab_size)
+
+    return logits, DecodeState(
+        kv=new_carries.get("kv"), rwkv=new_carries.get("rwkv"),
+        ssm=new_carries.get("ssm"), position=state.position + 1)
+
+
+# ------------------------------------------------------------- loss ---------
+
+def lm_loss(params: dict, tokens: Array, cfg: ArchConfig, *,
+            prefix_embeds: Array | None = None,
+            aux_weight: float = 0.01, **kw) -> Array:
+    """Next-token CE (+ MoE load-balance aux). Labels are tokens shifted by 1;
+    prefix (frontend) positions are excluded from the loss."""
+    logits, aux = forward_with_aux(params, tokens, cfg, prefix_embeds=prefix_embeds, **kw)
+    p = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    logits = logits[:, p:, :]
+    ce = layers.cross_entropy(logits[:, :-1], tokens[:, 1:])
+    return ce + aux_weight * aux

@@ -1,0 +1,118 @@
+"""Minimal pure-JAX optimizer library (no optax in the container).
+
+API mirrors the (init_fn, update_fn) convention:
+
+    opt = sgd(0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def _tree_zeros_like(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _resolve_lr(lr, count):
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class ScaleState(NamedTuple):
+    count: jax.Array
+
+
+def sgd(lr: float | Schedule) -> Optimizer:
+    def init(params):
+        return ScaleState(count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        step = _resolve_lr(lr, state.count)
+        updates = jax.tree_util.tree_map(lambda g: -step * g.astype(jnp.float32), grads)
+        return updates, ScaleState(count=state.count + 1)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    count: jax.Array
+    momentum: PyTree
+
+
+def momentum(lr: float | Schedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return MomentumState(count=jnp.zeros((), jnp.int32), momentum=_tree_zeros_like(params))
+
+    def update(grads, state, params=None):
+        step = _resolve_lr(lr, state.count)
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state.momentum, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: -step * (beta * m + g.astype(jnp.float32)), new_m, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -step * m, new_m)
+        return upd, MomentumState(count=state.count + 1, momentum=new_m)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(lr: float | Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return AdamState(count=jnp.zeros((), jnp.int32),
+                         mu=_tree_zeros_like(params), nu=_tree_zeros_like(params))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        step = _resolve_lr(lr, state.count)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            adam = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            return -step * (adam + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads)

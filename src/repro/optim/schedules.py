@@ -1,0 +1,35 @@
+"""Learning-rate schedules (pure functions of the step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def sched(count):
+        return jnp.asarray(value, jnp.float32)
+    return sched
+
+
+def cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((c - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return sched
+
+
+def inverse_sqrt(peak: float, warmup_steps: int):
+    def sched(count):
+        c = jnp.maximum(count.astype(jnp.float32), 1.0)
+        w = jnp.asarray(float(max(warmup_steps, 1)), jnp.float32)
+        return peak * jnp.minimum(c / w, jnp.sqrt(w / c))
+    return sched
+
+
+def step_decay(base: float, decay: float, every: int):
+    def sched(count):
+        k = (count // every).astype(jnp.float32)
+        return base * decay ** k
+    return sched

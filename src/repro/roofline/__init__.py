@@ -1,0 +1,3 @@
+from . import hw
+from .analysis import RooflineRow, analyze_record, load_rows, markdown_table, model_flops
+from .hlo_cost import HloCostModel, analyze_hlo

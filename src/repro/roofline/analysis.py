@@ -1,0 +1,136 @@
+"""Three-term roofline from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+  compute term    = per-device HLO FLOPs / peak FLOP/s
+  memory term     = per-device HBM traffic / HBM bandwidth
+  collective term = per-device collective bytes / ICI link bandwidth
+
+plus MODEL_FLOPS = 6*N*D (train) / 2*N_active*D (serve) and the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs * chips) that exposes padding/remat/dense-MoE
+waste.
+
+CLI: PYTHONPATH=src python -m repro.roofline.analysis results/*.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import dataclass
+
+from ..configs.registry import get_config
+from ..launch.shapes import INPUT_SHAPES
+from . import hw
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    suggestion: str
+
+    def step_time_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+_SUGGESTIONS = {
+    "collective": ("shrink or overlap the gossip all-gather: mix on "
+                   "reduce-scattered shards, top-k sparsify the mixing row, "
+                   "or move the vehicle axis onto fewer hops"),
+    "memory": ("cut HBM traffic: bf16 params/activations, fuse the "
+               "elementwise chains (Pallas), larger per-step tiles, or fewer "
+               "remat recomputes"),
+    "compute": ("cut FLOPs: drop padded-head waste via 2-D model sharding, "
+                "sorted/ragged MoE dispatch instead of dense-all-experts, "
+                "flash attention instead of materialized S^2"),
+}
+
+
+def analyze_record(rec: dict) -> RooflineRow | None:
+    if "error" in rec or "flops_per_device" not in rec:
+        return None
+    mesh = rec.get("mesh", {})
+    chips = 1
+    for v in mesh.values():
+        chips *= v
+    comp = rec["flops_per_device"] / hw.PEAK_FLOPS
+    memr = rec["traffic_bytes_per_device"] / hw.HBM_BW
+    coll_bytes = sum(rec.get("collective_bytes_per_device", {}).values())
+    coll = coll_bytes / hw.ICI_LINK_BW
+    terms = {"compute": comp, "memory": memr, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = rec["flops_per_device"] * chips
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"],
+        mesh="x".join(str(v) for v in mesh.values()), chips=chips,
+        compute_s=comp, memory_s=memr, collective_s=coll,
+        dominant=dominant, model_flops=mf, hlo_flops_global=hlo_global,
+        useful_ratio=mf / hlo_global if hlo_global else float("nan"),
+        suggestion=_SUGGESTIONS[dominant],
+    )
+
+
+def load_rows(paths: list[str]) -> list[RooflineRow]:
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            for line in f:
+                rec = json.loads(line)
+                row = analyze_record(rec)
+                if row:
+                    rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list[RooflineRow]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPS | useful ratio |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | **{r.dominant}** | "
+            f"{r.model_flops:.2e} | {r.useful_ratio:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.paths)
+    if args.json:
+        print(json.dumps([r.__dict__ for r in rows], indent=1))
+    else:
+        print(markdown_table(rows))
+        print()
+        for r in rows:
+            print(f"{r.arch} x {r.shape}: {r.dominant}-bound -> {r.suggestion}")
+
+
+if __name__ == "__main__":
+    main()

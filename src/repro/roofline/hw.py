@@ -1,0 +1,11 @@
+"""TPU v5e hardware constants (the TARGET platform; the container is CPU)."""
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_LINK_BW = 50e9         # bytes/s per ICI link (~spec value)
+
+CHIPS_PER_POD = 256        # 16 x 16
+PODS = 2
+
+VMEM_BYTES = 128 * 1024 * 1024  # v5e VMEM (~128 MB)
+HBM_BYTES = 16 * 1024**3        # 16 GB HBM per chip

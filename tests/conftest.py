@@ -1,0 +1,12 @@
+import os
+
+# single-device CPU for all tests (the dry-run is exercised via subprocess)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,78 @@
+"""Mixing matrices and the gossip mix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import aggregation as agg
+
+
+def _contact(k, seed, p=0.4):
+    r = np.random.default_rng(seed)
+    c = (r.random((k, k)) < p).astype(np.float32)
+    c = np.minimum(c + c.T + np.eye(k), 1)
+    return jnp.asarray(c)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 1000))
+def test_uniform_mixing_row_stochastic(k, seed):
+    w = np.asarray(agg.uniform_mixing(_contact(k, seed)))
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-5)
+    assert (w >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 1000))
+def test_metropolis_doubly_stochastic(k, seed):
+    w = np.asarray(agg.metropolis_mixing(_contact(k, seed)))
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-5)
+
+
+def test_sample_size_mixing():
+    c = jnp.asarray([[1, 1, 0], [1, 1, 1], [0, 1, 1]], jnp.float32)
+    n = jnp.asarray([10, 30, 60], jnp.float32)
+    w = np.asarray(agg.sample_size_mixing(c, n))
+    np.testing.assert_allclose(w[0], [0.25, 0.75, 0.0], atol=1e-6)
+    np.testing.assert_allclose(w[2], [0.0, 1 / 3, 2 / 3], atol=1e-6)
+
+
+def test_mix_params_matches_manual_einsum():
+    r = np.random.default_rng(0)
+    k = 5
+    w = jnp.asarray(r.dirichlet(np.ones(k), size=k), jnp.float32)
+    tree = {"a": jnp.asarray(r.normal(size=(k, 3, 4)), jnp.float32),
+            "b": jnp.asarray(r.normal(size=(k, 7)), jnp.float32)}
+    out = agg.mix_params(w, tree)
+    ref_a = np.einsum("kj,jxy->kxy", np.asarray(w), np.asarray(tree["a"]))
+    np.testing.assert_allclose(np.asarray(out["a"]), ref_a, atol=1e-5)
+
+
+def test_identity_mixing_is_noop():
+    k = 4
+    tree = {"a": jnp.arange(k * 6, dtype=jnp.float32).reshape(k, 6)}
+    out = agg.mix_params(jnp.eye(k), tree)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]), atol=1e-6)
+
+
+def test_consensus_distance():
+    k = 3
+    same = {"a": jnp.ones((k, 5))}
+    assert float(agg.consensus_distance(same)) < 1e-10
+    diff = {"a": jnp.asarray([[1.0] * 5, [0.0] * 5, [2.0] * 5])}
+    assert float(agg.consensus_distance(diff)) > 0.1
+
+
+def test_gossip_contracts_consensus_distance():
+    """One uniform gossip round on a connected graph must not increase Xi^2."""
+    r = np.random.default_rng(3)
+    k = 8
+    c = _contact(k, 5, p=0.5)
+    w = agg.uniform_mixing(c)
+    tree = {"a": jnp.asarray(r.normal(size=(k, 20)), jnp.float32)}
+    before = float(agg.consensus_distance(tree))
+    after = float(agg.consensus_distance(agg.mix_params(w, tree)))
+    assert after <= before + 1e-6

@@ -1,0 +1,115 @@
+"""Attention module: GQA math, qk-norm/bias variants, sliding window,
+ring-buffer decode, prefill->decode handoff."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, layers
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=1, d_model=32, num_heads=4,
+                num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=100)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def _run_full(cfg, seed=0, s=12, b=2, window=None):
+    p = attention.init_attn(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, s, cfg.d_model)) * 0.5
+    return p, x, attention.attention(p, x, cfg, window=window)
+
+
+def test_gqa_equals_mha_with_repeated_kv():
+    """GQA output == MHA where kv heads are explicitly repeated."""
+    cfg = _cfg()
+    p, x, out = _run_full(cfg)
+    # build an MHA (kv=4) config using repeated kv weights
+    cfg_mha = _cfg(num_kv_heads=4)
+    wk = p["wk"].reshape(32, 2, 8)
+    p_mha = dict(p)
+    p_mha["wk"] = jnp.repeat(wk, 2, axis=1).reshape(32, 32)
+    p_mha["wv"] = jnp.repeat(p["wv"].reshape(32, 2, 8), 2, axis=1).reshape(32, 32)
+    out_mha = attention.attention(p_mha, x, cfg_mha)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_mha), atol=1e-5)
+
+
+def test_causality():
+    cfg = _cfg()
+    p = attention.init_attn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 10, 32))
+    out1 = attention.attention(p, x, cfg)
+    x2 = x.at[:, 5:].set(0.0)
+    out2 = attention.attention(p, x2, cfg)
+    np.testing.assert_allclose(np.asarray(out1[:, :5]), np.asarray(out2[:, :5]), atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["bias", "qknorm"])
+def test_variants_run(variant):
+    cfg = _cfg(qkv_bias=(variant == "bias"), qk_norm=(variant == "qknorm"))
+    p, x, out = _run_full(cfg)
+    assert out.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_sliding_window_matches_masked_reference():
+    cfg = _cfg(sliding_window=4)
+    p, x, out = _run_full(cfg, s=16)
+    # reference with explicit banded mask
+    cfg_plain = _cfg()
+    ref = attention.attention(p, x, cfg_plain, window=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_padded_heads_are_inert():
+    """Config padded 4->8 q-heads must give the same function value."""
+    cfg = _cfg()
+    cfg_pad = dataclasses.replace(cfg, num_heads=8, num_kv_heads=4,
+                                  true_num_heads=4, true_num_kv_heads=2)
+    p = attention.init_attn(jax.random.PRNGKey(0), cfg)
+    p_pad = attention.init_attn(jax.random.PRNGKey(0), cfg_pad)
+    # copy the true weights into the padded layout
+    p_pad = dict(p_pad)
+    p_pad["wq"] = p_pad["wq"].at[:, :32].set(p["wq"]).at[:, 32:].set(0.0)
+    p_pad["wk"] = p_pad["wk"].at[:, :16].set(p["wk"]).at[:, 16:].set(0.0)
+    p_pad["wv"] = p_pad["wv"].at[:, :16].set(p["wv"]).at[:, 16:].set(0.0)
+    p_pad["wo"] = jnp.zeros_like(p_pad["wo"]).at[:32, :].set(p["wo"])
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 9, 32)) * 0.3
+    out = attention.attention(p, x, cfg)
+    out_pad = attention.attention(p_pad, x, cfg_pad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_pad), atol=1e-5)
+
+
+def test_decode_matches_full():
+    cfg = _cfg(qkv_bias=True)
+    p = attention.init_attn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32)) * 0.5
+    full = attention.attention(p, x, cfg)
+    cache = attention.init_cache(2, 8, cfg, dtype=jnp.float32)
+    outs = []
+    for t in range(8):
+        o, cache = attention.decode_attention(p, x[:, t:t + 1], cache, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=1e-4)
+
+
+def test_windowed_ring_buffer_decode():
+    """Ring-buffer decode with window w must equal full attention restricted
+    to the last w tokens."""
+    cfg = _cfg()
+    win = 4
+    p = attention.init_attn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 32)) * 0.5
+    full = attention.attention(p, x, cfg, window=win)
+    cache = attention.init_cache(1, win, cfg, dtype=jnp.float32)  # t_max == win
+    outs = []
+    for t in range(12):
+        o, cache = attention.decode_attention(p, x[:, t:t + 1], cache, cfg, window=win)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=1e-4)

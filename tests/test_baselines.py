@@ -1,0 +1,73 @@
+"""SP (push-sum) and decentralized-FedAvg baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, dfl_dds, state_vector
+
+
+def _contact(k, seed=0, p=0.5):
+    r = np.random.default_rng(seed)
+    c = (r.random((k, k)) < p).astype(np.float32)
+    return jnp.asarray(np.minimum(c + c.T + np.eye(k), 1))
+
+
+def test_push_sum_mixing_column_stochastic():
+    c = _contact(7, 2)
+    b = np.asarray(baselines.push_sum_mixing(c))
+    np.testing.assert_allclose(b.sum(axis=0), 1.0, atol=1e-5)
+
+
+def test_push_sum_conserves_mass():
+    """Push-sum invariant: sum_k x_k and sum_k y_k are conserved."""
+    k = 6
+    c = _contact(k, 1)
+    ps = baselines.init_push_sum({"w": jnp.arange(k * 3, dtype=jnp.float32).reshape(k, 3)}, k)
+
+    def grad_fn(params, batch, rng):
+        return jax.tree_util.tree_map(jnp.zeros_like, params), {"loss": jnp.zeros(())}
+
+    target = jnp.ones((k,)) / k
+    batches = jnp.zeros((k, 1))
+    out, _ = baselines.sp_round(ps, c, target, batches, jax.random.PRNGKey(0),
+                                grad_fn, lr=0.0)
+    np.testing.assert_allclose(float(jnp.sum(out.y)), k, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.sum(out.x["w"], axis=0)),
+                               np.asarray(jnp.sum(ps.x["w"], axis=0)), rtol=1e-4)
+
+
+def test_push_sum_consensus_on_static_graph():
+    """With zero gradients, z_k = x_k/y_k converges to the average."""
+    k = 5
+    c = _contact(k, 4, p=0.6)
+    x0 = jnp.asarray(np.random.default_rng(0).normal(size=(k, 4)), jnp.float32)
+    ps = baselines.init_push_sum({"w": x0}, k)
+
+    def grad_fn(params, batch, rng):
+        return jax.tree_util.tree_map(jnp.zeros_like, params), {"loss": jnp.zeros(())}
+
+    target = jnp.ones((k,)) / k
+    for _ in range(60):
+        ps, _ = baselines.sp_round(ps, c, target, jnp.zeros((k, 1)),
+                                   jax.random.PRNGKey(0), grad_fn, lr=0.0)
+    z = np.asarray(baselines.sp_model(ps)["w"])
+    avg = np.asarray(x0).mean(axis=0)
+    np.testing.assert_allclose(z, np.tile(avg, (k, 1)), atol=1e-3)
+
+
+def test_dfl_round_runs_and_updates_state():
+    k = 4
+    c = _contact(k, 3)
+    params = {"w": jnp.ones((k, 3))}
+    fed = dfl_dds.init_federation(params, {"c": jnp.zeros((k,))}, k)
+
+    def local_train(p, o, b, r):
+        return jax.tree_util.tree_map(lambda x: x + 1, p), o, {"loss": jnp.zeros(())}
+
+    target = state_vector.target_state(jnp.asarray([1, 2, 3, 4]))
+    out, diags = baselines.dfl_round(
+        fed, c, target, jnp.zeros((k, 1)), jax.random.PRNGKey(0), local_train,
+        sample_counts=jnp.asarray([1, 2, 3, 4], jnp.float32), lr=0.1, local_steps=2)
+    assert out.epoch == 1
+    np.testing.assert_allclose(np.asarray(out.state_matrix).sum(1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out.params["w"]), 2.0, atol=1e-6)

@@ -1,0 +1,135 @@
+"""Configs, mesh padding, and sharding-spec/param-tree consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import assigned_architectures, get_config
+from repro.configs.base import ArchConfig
+from repro.launch import sharding as shard_lib
+from repro.launch import shapes as shapes_lib
+from repro.models import transformer
+
+ARCHS = assigned_architectures()
+
+
+def test_registry_has_all_ten():
+    assert len(ARCHS) == 10
+    families = {get_config(a).family for a in ARCHS}
+    assert families == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_exact_assigned_dimensions(arch):
+    cfg = get_config(arch)
+    expected = {
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "rwkv6-3b": (32, 2560, 40, 0, 8960, 65536),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    assert cfg.citation
+
+
+def test_moe_settings():
+    m = get_config("mixtral-8x7b")
+    assert (m.num_experts, m.top_k, m.sliding_window) == (8, 2, 4096)
+    g = get_config("granite-moe-1b-a400m")
+    assert (g.num_experts, g.top_k, g.tie_embeddings) == (32, 8, True)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_pad_for_mesh_divisibility(arch):
+    cfg = get_config(arch).pad_for_mesh(16)
+    if cfg.num_heads:
+        assert cfg.num_heads % 16 == 0 or cfg.num_heads < 16
+        assert cfg.num_heads % 16 == 0  # all assigned archs end up divisible
+    if cfg.num_kv_heads:
+        assert cfg.num_heads % cfg.num_kv_heads == 0
+    assert cfg.vocab_size % 16 == 0
+    assert cfg.true_vocab_size == get_config(arch).vocab_size
+
+
+def test_padding_is_recorded():
+    cfg = get_config("qwen1.5-4b").pad_for_mesh(16)
+    assert cfg.num_heads == 32 and cfg.true_num_heads == 20
+    cfg = get_config("hymba-1.5b").pad_for_mesh(16)
+    assert cfg.num_heads == 32 and cfg.num_kv_heads == 8
+    cfg = get_config("rwkv6-3b").pad_for_mesh(16)
+    assert cfg.num_heads == 48 and cfg.true_num_heads == 40
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers == 2
+    assert r.d_model <= 512
+    if r.is_moe:
+        assert r.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_tree_matches_params(arch):
+    """Every param leaf must have a spec leaf of matching rank (+1 lead dim)."""
+    cfg = get_config(arch).pad_for_mesh(16)
+    params_sds = jax.eval_shape(
+        lambda r: transformer.init_params(r, cfg), jax.random.PRNGKey(0))
+    specs = shard_lib.build_param_specs(cfg)
+    flat_p = jax.tree_util.tree_leaves_with_path(params_sds)
+    flat_s = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    paths_p = {jax.tree_util.keystr(p) for p, _ in flat_p}
+    paths_s = {jax.tree_util.keystr(p) for p, _ in flat_s}
+    assert paths_p == paths_s
+    spec_by_path = {jax.tree_util.keystr(p): s for p, s in flat_s}
+    for path, leaf in flat_p:
+        spec = spec_by_path[jax.tree_util.keystr(path)]
+        # blocks have a leading L dim accounted in the spec already
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+        # sharded dims must divide by 16
+        for dim, axis in enumerate(spec):
+            if axis == "model":
+                assert leaf.shape[dim] % 16 == 0, (path, dim, leaf.shape)
+
+
+def test_param_count_close_to_actual():
+    for arch in ["qwen3-1.7b", "granite-34b", "mixtral-8x7b"]:
+        cfg = get_config(arch)
+        small = cfg.reduced()
+        actual = sum(x.size for x in jax.tree_util.tree_leaves(jax.eval_shape(
+            lambda r: transformer.init_params(r, small), jax.random.PRNGKey(0))))
+        est = small.param_count()
+        assert abs(actual - est) / actual < 0.2, (arch, actual, est)
+
+
+def test_fed_layouts_cover_all():
+    assert set(shapes_lib.FED_LAYOUT) == set(ARCHS)
+    for v, f in shapes_lib.FED_LAYOUT.values():
+        assert v * f == 16
+
+
+def test_input_shapes_exact():
+    s = shapes_lib.INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+def test_long_context_cfg_policy():
+    # sub-quadratic archs unchanged; dense gets a window
+    assert shapes_lib.long_context_cfg(get_config("rwkv6-3b")).sliding_window is None
+    assert shapes_lib.long_context_cfg(get_config("mixtral-8x7b")).sliding_window == 4096
+    assert (shapes_lib.long_context_cfg(get_config("granite-34b")).sliding_window
+            == shapes_lib.LONG_CONTEXT_WINDOW)

@@ -1,0 +1,81 @@
+"""RSU (paper Sec. V-C) and unreliable-communication (Sec. VII) extensions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dfl_dds, state_vector
+from repro.data.synthetic import synthetic_mnist
+from repro.fed import extensions, topology
+from repro.fed.simulator import SimulationConfig, run_simulation
+
+
+def test_place_rsus_at_high_degree_junctions():
+    net = topology.grid_net()
+    pos = extensions.place_rsus(net, 4)
+    assert pos.shape == (4, 2)
+    # grid interior nodes have degree 4; RSUs must sit on degree-4 junctions
+    deg = net.degrees()
+    for p in pos:
+        node = int(np.argmin(np.linalg.norm(net.positions - p, axis=1)))
+        assert deg[node] == 4
+
+
+def test_drop_contacts_symmetric_with_selfloops():
+    rng = np.random.default_rng(0)
+    c = topology.contact_matrix(rng.uniform(0, 300, (12, 2)), 150.0)
+    dropped = extensions.drop_contacts(c, 0.5, rng)
+    assert (dropped == dropped.T).all()
+    assert (np.diag(dropped) == 1).all()
+    assert dropped.sum() <= c.sum()
+    # p_drop=0 is identity
+    np.testing.assert_array_equal(extensions.drop_contacts(c, 0.0, rng), c)
+
+
+def test_rsu_state_vector_never_bumps_itself():
+    k = 5  # 3 vehicles + 2 RSUs
+    mask = jnp.asarray([1, 1, 1, 0, 0], jnp.float32)
+    s = state_vector.init_state(k)
+    s = state_vector.local_update(s, 0.1, 4, update_mask=mask)
+    sm = np.asarray(s)
+    assert (sm[3] == 0).all() and (sm[4] == 0).all()  # RSUs contribute nothing
+    np.testing.assert_allclose(np.diag(sm)[:3], 1.0, atol=1e-6)
+
+
+def test_rsu_models_only_change_by_mixing():
+    k = 4  # 3 vehicles + 1 RSU
+    mask = jnp.asarray([1, 1, 1, 0], jnp.float32)
+    fed = dfl_dds.init_federation(
+        {"w": jnp.arange(k * 2, dtype=jnp.float32).reshape(k, 2)},
+        {"n": jnp.zeros((k,))}, k)
+    target = state_vector.target_state(jnp.asarray([1.0, 1, 1, 0]))
+
+    def bump_train(p, o, b, r):
+        return jax.tree_util.tree_map(lambda x: x + 100.0, p), o, {"loss": jnp.zeros(())}
+
+    contact = jnp.ones((k, k))
+    out, diags = dfl_dds.dds_round(
+        fed, contact, target, jnp.zeros((k, 1)), jax.random.PRNGKey(0),
+        bump_train, lr=0.1, local_steps=1, p1_steps=40, local_mask=mask)
+    w = np.asarray(out.params["w"])
+    mixed = np.asarray(diags["mixing"] @ fed.params["w"])
+    # vehicles got +100; the RSU kept exactly its mixed model
+    np.testing.assert_allclose(w[:3], mixed[:3] + 100.0, atol=1e-4)
+    np.testing.assert_allclose(w[3], mixed[3], atol=1e-5)
+
+
+def test_simulation_with_rsus_and_drops_runs():
+    ds = synthetic_mnist(n_train=1200, n_test=200)
+    cfg = SimulationConfig(algorithm="dds", num_vehicles=6, num_rsus=2,
+                           p_drop=0.3, epochs=3, eval_every=3, eval_samples=200,
+                           local_steps=2, batch_size=16, p1_steps=40, seed=3)
+    res = run_simulation(cfg, dataset=ds)
+    assert np.isfinite(res.final_accuracy())
+    assert len(res.vehicle_accuracy[0]) == 6  # RSUs excluded from metrics
+
+
+def test_rsu_target_gives_rsus_zero_weight():
+    counts = jnp.asarray([100, 200, 0, 0])
+    g = np.asarray(state_vector.target_state(counts))
+    assert g[2] == 0 and g[3] == 0
+    np.testing.assert_allclose(g[:2], [1 / 3, 2 / 3], atol=1e-6)

@@ -1,0 +1,73 @@
+"""The trip-count-aware HLO cost model behind the roofline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.roofline import analysis, hw
+
+
+def _flops(fn, *args):
+    return analyze_hlo(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def test_plain_matmul_flops_exact():
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    r = _flops(lambda a, b: a @ b, x, x)
+    assert abs(r["flops_per_device"] - 2 * 512 ** 3) / (2 * 512 ** 3) < 1e-6
+
+
+def test_while_trip_count_multiplies():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def f(a, w):
+        return jax.lax.fori_loop(0, 13, lambda i, acc: acc @ w, a)
+
+    r = _flops(f, x, x)
+    expect = 13 * 2 * 256 ** 3
+    assert abs(r["flops_per_device"] - expect) / expect < 1e-6
+
+
+def test_nested_scans_multiply():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f(a, w):
+        def outer(acc, _):
+            acc, _ = jax.lax.scan(lambda c, _: (c @ w, None), acc, None, length=5)
+            return acc, None
+        out, _ = jax.lax.scan(outer, a, None, length=3)
+        return out
+
+    r = _flops(f, x, x)
+    expect = 15 * 2 * 128 ** 3
+    assert abs(r["flops_per_device"] - expect) / expect < 1e-6
+
+
+def test_traffic_counts_operands_and_results():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    r = _flops(lambda a, b: a @ b, x, x)
+    # 2 inputs + 1 output = 12 MiB minimum
+    assert r["traffic_bytes_per_device"] >= 3 * 4 * 1024 ** 2
+
+
+def test_analysis_dominant_term():
+    rec = {
+        "arch": "qwen3-1.7b", "shape": "train_4k", "mesh": {"v": 16, "m": 16},
+        "flops_per_device": 1e15, "traffic_bytes_per_device": 1e9,
+        "collective_bytes_per_device": {"all-gather": 1e9},
+    }
+    row = analysis.analyze_record(rec)
+    assert row.dominant == "compute"
+    assert row.chips == 256
+    assert row.compute_s == 1e15 / hw.PEAK_FLOPS
+
+
+def test_model_flops_formulas():
+    mf_train = analysis.model_flops("qwen3-1.7b", "train_4k")
+    mf_decode = analysis.model_flops("qwen3-1.7b", "decode_32k")
+    n = 1.4e9  # ~1.7B-ish; just check the scale relation
+    assert mf_train > 100 * mf_decode
+    # moe uses ACTIVE params
+    from repro.configs import get_config
+    mx = get_config("mixtral-8x7b")
+    assert mx.active_param_count() < 0.4 * mx.param_count()

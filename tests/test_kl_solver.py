@@ -1,0 +1,95 @@
+"""P1 solver: optimality vs scipy SLSQP + constraint properties."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from scipy.optimize import minimize
+
+from repro.core import kl_solver
+
+
+def _scipy_optimum(S, g, mask):
+    K = len(g)
+    idx = np.where(mask)[0]
+
+    def f(a_active):
+        a = np.zeros(K)
+        a[idx] = a_active
+        u = a @ S
+        return float(np.sum(np.where(
+            u > 1e-12, u * (np.log(np.clip(u, 1e-12, 1)) - np.log(np.clip(g, 1e-12, 1))), 0)))
+
+    res = minimize(f, np.ones(len(idx)) / len(idx), bounds=[(0, 1)] * len(idx),
+                   constraints=({"type": "eq", "fun": lambda a: a.sum() - 1},),
+                   method="SLSQP", options={"maxiter": 500, "ftol": 1e-12})
+    return res.fun
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_matches_scipy_optimum(seed):
+    r = np.random.default_rng(seed)
+    K = int(r.integers(4, 20))
+    S = r.dirichlet(np.ones(K) * r.uniform(0.3, 4), size=K).astype(np.float32)
+    g = r.dirichlet(np.ones(K) * r.uniform(0.5, 8)).astype(np.float32)
+    nb = r.choice(K, size=int(r.integers(2, K + 1)), replace=False)
+    mask = np.zeros(K, np.float32)
+    mask[nb] = 1
+    alpha = kl_solver.solve_p1(jnp.asarray(S), jnp.asarray(g), jnp.asarray(mask))
+    eg = float(kl_solver.kl_objective(alpha, jnp.asarray(S), jnp.asarray(g)))
+    sp = _scipy_optimum(S, g, mask)
+    assert eg - sp < 5e-5, (eg, sp)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 16))
+def test_constraints_always_satisfied(seed, k):
+    r = np.random.default_rng(seed)
+    S = r.dirichlet(np.ones(k), size=k).astype(np.float32)
+    g = r.dirichlet(np.ones(k)).astype(np.float32)
+    nb = r.choice(k, size=int(r.integers(1, k + 1)), replace=False)
+    mask = np.zeros(k, np.float32)
+    mask[nb] = 1
+    alpha = np.asarray(kl_solver.solve_p1(
+        jnp.asarray(S), jnp.asarray(g), jnp.asarray(mask), num_steps=50))
+    assert abs(alpha.sum() - 1) < 1e-5           # simplex
+    assert (alpha >= -1e-7).all()                # nonneg
+    assert (alpha[mask == 0] == 0).all()         # support on P_{k,t} exactly
+
+
+def test_zero_states_fall_back_to_uniform():
+    k = 6
+    g = jnp.ones((k,)) / k
+    mask = jnp.asarray([1, 1, 0, 1, 0, 0], jnp.float32)
+    alpha = np.asarray(kl_solver.solve_p1(jnp.zeros((k, k)), g, mask, num_steps=40))
+    np.testing.assert_allclose(alpha[[0, 1, 3]], 1 / 3, atol=1e-5)
+
+
+def test_solve_all_matches_single():
+    r = np.random.default_rng(7)
+    k = 9
+    S = jnp.asarray(r.dirichlet(np.ones(k), size=k), jnp.float32)
+    g = jnp.asarray(r.dirichlet(np.ones(k)), jnp.float32)
+    C = jnp.asarray(np.minimum(
+        (r.random((k, k)) < 0.4) + (r.random((k, k)) < 0.4).T + np.eye(k), 1), jnp.float32)
+    W = kl_solver.solve_p1_all(S, g, C, num_steps=120)
+    for i in [0, 3, 8]:
+        single = kl_solver.solve_p1(S, g, C[i], num_steps=120)
+        np.testing.assert_allclose(np.asarray(W[i]), np.asarray(single), atol=1e-5)
+
+
+def test_diversification_beats_naive_on_paper_example():
+    """The paper's Fig.1/Sec.V example: optimizing via state vectors must not
+    under-weight an intermediate vehicle whose state carries unseen sources."""
+    # vehicles A,C,D in contact (B reachable only through C's state vector)
+    g = jnp.asarray([100 / 310, 100 / 310, 10 / 310, 100 / 310], jnp.float32)
+    S = jnp.asarray([
+        [1.0, 0.0, 0.0, 0.0],      # A: only its own data so far
+        [0.0, 1.0, 0.0, 0.0],      # B
+        [0.0, 0.45, 0.55, 0.0],    # C: carries B's contribution
+        [0.0, 0.0, 0.0, 1.0],      # D
+    ], jnp.float32)
+    mask = jnp.asarray([1, 0, 1, 1], jnp.float32)  # P_A = {A, C, D}
+    alpha = np.asarray(kl_solver.solve_p1(S, g, mask))
+    naive_c = 10 / 210  # weight C by its sample count only
+    assert alpha[2] > naive_c * 2, alpha  # C matters because it carries B

@@ -1,0 +1,85 @@
+"""Launch-layer units that don't need the 512-device dry-run: meshes are
+exercised via subprocess there; here we test shapes, variants, and spec
+construction logic."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import aggregation
+from repro.launch import shapes as shapes_lib
+from repro.launch import variants as variants_lib
+
+
+def test_train_input_specs_shapes():
+    cfg = get_config("qwen3-1.7b").pad_for_mesh(16)
+    shape = shapes_lib.INPUT_SHAPES["train_4k"]
+    specs = shapes_lib.train_input_specs(cfg, shape, 16)
+    assert specs["tokens"].shape == (16, 16, 4096)   # V x B/V x S
+    assert specs["contact"].shape == (16, 16)
+    assert specs["target"].shape == (16,)
+
+
+def test_vlm_train_specs_include_prefix():
+    cfg = get_config("internvl2-26b").pad_for_mesh(16)
+    shape = shapes_lib.INPUT_SHAPES["train_4k"]
+    specs = shapes_lib.train_input_specs(cfg, shape, 4)
+    # frontend tokens are carved out of the 4096 sequence budget
+    assert specs["tokens"].shape == (4, 64, 4096 - cfg.frontend_tokens)
+    assert specs["prefix_embeds"].shape == (4, 64, 256, 6144)
+
+
+def test_decode_input_specs_cover_state_families():
+    for arch, has_kv, has_rwkv, has_ssm in [
+        ("qwen3-1.7b", True, False, False),
+        ("rwkv6-3b", False, True, False),
+        ("hymba-1.5b", True, False, True),
+    ]:
+        cfg = shapes_lib.serve_cfg(get_config(arch))
+        specs = shapes_lib.decode_input_specs(cfg, shapes_lib.INPUT_SHAPES["decode_32k"])
+        st = specs["state"]
+        assert (st.kv is not None) == has_kv, arch
+        assert (st.rwkv is not None) == has_rwkv, arch
+        assert (st.ssm is not None) == has_ssm, arch
+
+
+def test_serve_cfg_pads_kv_for_cache_sharding():
+    c = shapes_lib.serve_cfg(get_config("internvl2-26b"))  # kv=8 -> 16
+    assert c.num_kv_heads == 16 and c.true_num_kv_heads == 8
+    c = shapes_lib.serve_cfg(get_config("qwen2.5-3b"))     # kv=2 stays
+    assert c.num_kv_heads == 2
+
+
+def test_variant_baseline_is_identity():
+    cfg = get_config("mixtral-8x7b")
+    out_cfg, overrides = variants_lib.apply_variant("baseline", cfg, "train")
+    assert out_cfg is cfg and overrides == {}
+
+
+def test_variant_opt_train():
+    cfg = get_config("qwen1.5-4b")
+    out_cfg, ov = variants_lib.apply_variant("opt", cfg, "train")
+    assert ov["compute_dtype"] == jnp.bfloat16
+    assert ov["mix_params_fn"] is aggregation.mix_params_lowp
+
+
+def test_variant_ragged_requires_moe():
+    with pytest.raises(ValueError):
+        variants_lib.apply_variant("ragged_moe", get_config("qwen3-1.7b"), "train")
+    out_cfg, _ = variants_lib.apply_variant("ragged_moe", get_config("mixtral-8x7b"), "train")
+    assert out_cfg.moe_impl == "ragged"
+
+
+def test_mix_params_lowp_close_to_f32():
+    import numpy as np
+    r = np.random.default_rng(0)
+    k = 6
+    w = jnp.asarray(r.dirichlet(np.ones(k), size=k), jnp.float32)
+    tree = {"a": jnp.asarray(r.normal(size=(k, 64)), jnp.float32)}
+    hi = aggregation.mix_params(w, tree)["a"]
+    lo = aggregation.mix_params_lowp(w, tree)["a"]
+    rel = float(jnp.max(jnp.abs(hi - lo)) / (jnp.max(jnp.abs(hi)) + 1e-9))
+    assert rel < 2e-2, rel

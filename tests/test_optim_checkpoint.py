@@ -1,0 +1,98 @@
+"""Optimizers, schedules, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.optim import (adamw, apply_updates, clip_by_global_norm,
+                         global_norm, momentum, schedules, sgd)
+
+
+def test_sgd_matches_manual():
+    opt = sgd(0.1)
+    params = {"w": jnp.ones((3,))}
+    grads = {"w": jnp.asarray([1.0, 2.0, 3.0])}
+    st = opt.init(params)
+    upd, st = opt.update(grads, st, params)
+    out = apply_updates(params, upd)
+    np.testing.assert_allclose(np.asarray(out["w"]), [0.9, 0.8, 0.7], atol=1e-6)
+    assert int(st.count) == 1
+
+
+def test_momentum_accumulates():
+    opt = momentum(1.0, beta=0.5)
+    p = {"w": jnp.zeros(())}
+    g = {"w": jnp.ones(())}
+    st = opt.init(p)
+    u1, st = opt.update(g, st, p)
+    u2, st = opt.update(g, st, p)
+    assert abs(float(u1["w"]) + 1.0) < 1e-6      # -lr * g
+    assert abs(float(u2["w"]) + 1.5) < 1e-6      # -lr * (0.5*1 + 1)
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = adamw(1e-2, weight_decay=0.0)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 3.0)}
+    st = opt.init(p)
+    u, st = opt.update(g, st, p)
+    np.testing.assert_allclose(np.asarray(u["w"]), -1e-2, rtol=1e-3)
+
+
+def test_adamw_reduces_quadratic():
+    opt = adamw(0.1)
+    p = {"w": jnp.asarray(5.0)}
+    st = opt.init(p)
+    for _ in range(100):
+        g = jax.grad(lambda q: q["w"] ** 2)(p)
+        u, st = opt.update(g, st, p)
+        p = apply_updates(p, u)
+    assert abs(float(p["w"])) < 0.5
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_schedules():
+    c = schedules.constant(0.5)(jnp.asarray(100))
+    assert float(c) == 0.5
+    cos = schedules.cosine(1.0, 10, 110)
+    assert float(cos(jnp.asarray(0))) == 0.0
+    assert abs(float(cos(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(cos(jnp.asarray(110))) < 1e-6
+    inv = schedules.inverse_sqrt(1.0, 100)
+    assert abs(float(inv(jnp.asarray(400))) - 0.5) < 1e-6
+    sd = schedules.step_decay(1.0, 0.5, 10)
+    assert abs(float(sd(jnp.asarray(25))) - 0.25) < 1e-6
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones((4,), jnp.int32)}}
+    path = os.path.join(tmp_path, "ck")
+    ckpt.save(path, tree, {"note": "hi"})
+    restored = ckpt.restore(path, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    np.testing.assert_allclose(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert ckpt.metadata(path)["note"] == "hi"
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "ck")
+    ckpt.save(path, {"a": jnp.ones((2,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(path, {"a": jnp.ones((3,))})
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep=2)
+    for step in [1, 2, 3, 4]:
+        mgr.save(step, {"s": jnp.asarray(float(step))})
+    assert mgr.latest_step() == 4
+    restored, step = mgr.restore_latest({"s": jnp.zeros(())})
+    assert step == 4 and float(restored["s"]) == 4.0
+    assert len(os.listdir(tmp_path)) == 2

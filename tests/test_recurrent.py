@@ -1,0 +1,103 @@
+"""RWKV6 + selective-SSM: chunked-parallel training form == sequential decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import rwkv6, ssm
+
+
+def _rwkv_cfg(d=32, hd=8, heads=None):
+    return ArchConfig(name="t", family="ssm", num_layers=1, d_model=d,
+                      num_heads=heads or d // hd, num_kv_heads=0, head_dim=hd,
+                      d_ff=64, vocab_size=100, attn_free=True)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_rwkv_chunked_equals_decode(chunk):
+    cfg = _rwkv_cfg()
+    p = rwkv6.init_time_mix(jax.random.PRNGKey(0), cfg)
+    B, S, d = 2, 37, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d)) * 0.5
+    y_chunk, st = rwkv6.time_mix(p, x, cfg, chunk=chunk)
+    h = rwkv6.num_heads(cfg)
+    state = {"shift": jnp.zeros((B, d)), "wkv": jnp.zeros((B, h, 8, 8), jnp.float32)}
+    ys = []
+    for t in range(S):
+        y, state = rwkv6.time_mix_decode(p, x[:, t:t + 1], cfg, state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st["wkv"]), np.asarray(state["wkv"]),
+                               atol=1e-4)
+
+
+def test_rwkv_padded_heads_equal_decode():
+    cfg = _rwkv_cfg(heads=6)  # inner width 48 != d_model 32 (padded regime)
+    p = rwkv6.init_time_mix(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 19
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32)) * 0.5
+    y_chunk, _ = rwkv6.time_mix(p, x, cfg, chunk=8)
+    state = {"shift": jnp.zeros((B, 32)), "wkv": jnp.zeros((B, 6, 8, 8), jnp.float32)}
+    ys = []
+    for t in range(S):
+        y, state = rwkv6.time_mix_decode(p, x[:, t:t + 1], cfg, state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=1e-4)
+
+
+def test_rwkv_state_carry_across_calls():
+    """Two half-sequence calls with carried state == one full call."""
+    cfg = _rwkv_cfg()
+    p = rwkv6.init_time_mix(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 24, 32)) * 0.5
+    y_full, _ = rwkv6.time_mix(p, x, cfg, chunk=8)
+    y1, st = rwkv6.time_mix(p, x[:, :12], cfg, chunk=8)
+    y2, _ = rwkv6.time_mix(p, x[:, 12:], cfg, state=st, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+
+
+def test_channel_mix_token_shift():
+    cfg = _rwkv_cfg()
+    p = rwkv6.init_channel_mix(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 32))
+    out, shift = rwkv6.channel_mix(p, x, jnp.zeros((2, 32)))
+    assert out.shape == x.shape
+    np.testing.assert_allclose(np.asarray(shift), np.asarray(x[:, -1]), atol=1e-6)
+
+
+def _ssm_cfg(d=24, n=4):
+    return ArchConfig(name="t", family="hybrid", num_layers=1, d_model=d,
+                      num_heads=2, num_kv_heads=1, head_dim=8, d_ff=64,
+                      vocab_size=100, ssm_state=n, hybrid=True)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_ssm_chunked_equals_decode(chunk):
+    cfg = _ssm_cfg()
+    p = ssm.init_ssm(jax.random.PRNGKey(0), cfg)
+    B, S, d = 2, 29, 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d)) * 0.5
+    y_full, st = ssm.ssm_forward(p, x, cfg, chunk=chunk)
+    state = {"conv": jnp.zeros((B, ssm.CONV_K - 1, d)), "h": jnp.zeros((B, d, 4))}
+    ys = []
+    for t in range(S):
+        y, state = ssm.ssm_decode(p, x[:, t:t + 1], cfg, state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(state["h"]), atol=1e-4)
+
+
+def test_ssm_state_carry_across_calls():
+    cfg = _ssm_cfg()
+    p = ssm.init_ssm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 24)) * 0.5
+    y_full, _ = ssm.ssm_forward(p, x, cfg, chunk=8)
+    y1, st = ssm.ssm_forward(p, x[:, :7], cfg, chunk=8)
+    y2, _ = ssm.ssm_forward(p, x[:, 7:], cfg, state=st, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)

@@ -1,0 +1,84 @@
+"""Unit + property tests for the paper's state-vector machinery (Eqs. 5-9)."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import state_vector as sv
+
+
+def test_init_state_zero():
+    s = sv.init_state(5)
+    assert s.shape == (5, 5)
+    assert float(jnp.sum(jnp.abs(s))) == 0.0
+
+
+def test_local_update_bumps_diagonal_and_normalizes():
+    s = sv.init_state(4)
+    s = sv.local_update(s, lr=0.1, local_steps=8)
+    # first round: all mass on the diagonal
+    np.testing.assert_allclose(np.asarray(s), np.eye(4), atol=1e-6)
+
+
+def test_local_update_matches_eq5_eq6():
+    # hand-computed, Eq.5 bumps vehicle k's OWN coordinate (the diagonal):
+    # row0: [0.5+0.2, 0.5]/1.2 ; row1: [0.2, 0.8+0.2]/1.2
+    s = jnp.array([[0.5, 0.5], [0.2, 0.8]])
+    out = sv.local_update(s, lr=0.1, local_steps=2)
+    np.testing.assert_allclose(np.asarray(out[0]), [0.7 / 1.2, 0.5 / 1.2], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), [0.2 / 1.2, 1.0 / 1.2], atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(hnp.arrays(np.float64, (6, 6), elements=st.floats(0, 10)))
+def test_normalize_rows_on_simplex(mat):
+    out = np.asarray(sv.normalize(jnp.asarray(mat, jnp.float32)))
+    sums = out.sum(axis=1)
+    for i in range(6):
+        if mat[i].sum() > 1e-9:
+            assert abs(sums[i] - 1.0) < 1e-5
+    assert (out >= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 10_000))
+def test_aggregate_preserves_simplex(k, seed):
+    r = np.random.default_rng(seed)
+    s = r.dirichlet(np.ones(k), size=k).astype(np.float32)
+    w = r.dirichlet(np.ones(k), size=k).astype(np.float32)  # row-stochastic
+    out = np.asarray(sv.aggregate(jnp.asarray(s), jnp.asarray(w)))
+    np.testing.assert_allclose(out.sum(axis=1), 1.0, atol=1e-5)
+    assert (out >= -1e-7).all()
+
+
+def test_entropy_bounds():
+    k = 8
+    uniform = jnp.ones((1, k)) / k
+    point = jnp.zeros((1, k)).at[0, 0].set(1.0)
+    assert abs(float(sv.entropy(uniform)[0]) - np.log2(k)) < 1e-5
+    assert float(sv.entropy(point)[0]) < 1e-6
+
+
+def test_kl_zero_iff_target():
+    g = jnp.array([0.1, 0.2, 0.3, 0.4])
+    s = jnp.stack([g, jnp.array([0.4, 0.3, 0.2, 0.1])])
+    kl = np.asarray(sv.kl_to_target(s, g))
+    assert kl[0] < 1e-6
+    assert kl[1] > 0.1
+
+
+def test_kl_equals_entropy_relation_balanced():
+    # paper Sec. V-B: D_KL(s||uniform) = log2(K) - H(s)
+    k = 6
+    r = np.random.default_rng(1)
+    s = jnp.asarray(r.dirichlet(np.ones(k), size=3), jnp.float32)
+    g = jnp.ones((k,)) / k
+    lhs = np.asarray(sv.kl_to_target(s, g))
+    rhs = np.log2(k) - np.asarray(sv.entropy(s))
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+
+def test_target_state():
+    t = np.asarray(sv.target_state(jnp.array([100, 100, 10, 100])))
+    np.testing.assert_allclose(t, [100 / 310, 100 / 310, 10 / 310, 100 / 310], atol=1e-6)

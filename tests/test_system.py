@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests: the paper's system at miniature scale.
+
+These are the integration tests of the full stack: synthetic data ->
+partition -> mobility -> {DFL-DDS, DFL, SP} rounds -> per-vehicle accuracy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import synthetic_mnist
+from repro.fed.simulator import SimulationConfig, run_simulation
+from repro.fed import metrics
+
+
+@pytest.fixture(scope="module")
+def tiny_ds():
+    return synthetic_mnist(n_train=2000, n_test=400)
+
+
+@pytest.fixture(scope="module")
+def results(tiny_ds):
+    out = {}
+    for algo in ("dds", "dfl", "sp"):
+        cfg = SimulationConfig(
+            algorithm=algo, num_vehicles=8, epochs=15, eval_every=5,
+            eval_samples=400, local_steps=4, batch_size=32, p1_steps=60,
+            lr=0.15, seed=0)
+        out[algo] = run_simulation(cfg, dataset=tiny_ds)
+    return out
+
+
+def test_all_algorithms_learn(results):
+    # DDS/DFL take E=4 batch steps per epoch; SP takes ONE full-batch step per
+    # epoch (paper Sec. VI-A.5) and is far slower — the paper's own Fig. 8
+    # finding. At 15 epochs we require learning for dds/dfl and only
+    # non-divergence for sp.
+    for algo in ("dds", "dfl"):
+        res = results[algo]
+        assert res.final_accuracy() > 0.2, (algo, res.avg_accuracy)
+        assert res.avg_accuracy[-1] >= res.avg_accuracy[0] - 0.05, algo
+    sp = results["sp"]
+    assert np.isfinite(sp.final_accuracy()) and sp.final_accuracy() >= 0.08, sp.avg_accuracy
+
+
+def test_history_shapes(results):
+    res = results["dds"]
+    assert len(res.epochs_evaluated) == len(res.avg_accuracy)
+    assert all(len(a) == 8 for a in res.vehicle_accuracy)
+    assert all(len(e) == 8 for e in res.entropy)
+    assert all(np.isfinite(c) for c in res.consensus_distance)
+
+
+def test_state_vectors_diversify_over_time(results):
+    res = results["dds"]
+    assert res.entropy[-1].mean() > res.entropy[0].mean() - 1e-6
+
+
+def test_metrics_helpers():
+    accs = np.array([0.1, 0.5, 0.9, 0.7])
+    x, f = metrics.accuracy_cdf(accs)
+    assert f[-1] == 1.0
+    assert metrics.pearson(np.arange(10), np.arange(10) * 2.0) > 0.999
+    assert metrics.pearson(np.arange(10), -np.arange(10.0)) < -0.999
+    curve = np.array([0.1, 0.3, 0.5, 0.7])
+    assert metrics.epochs_to_target(curve, 0.5) == 3
+    assert metrics.epochs_to_target(curve, 0.9) is None
+
+
+def test_unbalanced_iid_distribution_runs(tiny_ds):
+    cfg = SimulationConfig(algorithm="dds", distribution="unbalanced_iid",
+                           num_vehicles=6, epochs=4, eval_every=4,
+                           eval_samples=200, local_steps=2, batch_size=16,
+                           p1_steps=40, seed=1)
+    res = run_simulation(cfg, dataset=tiny_ds)
+    assert np.isfinite(res.final_accuracy())
+
+
+@pytest.mark.parametrize("net", ["random", "spider"])
+def test_other_topologies_run(tiny_ds, net):
+    cfg = SimulationConfig(algorithm="dds", road_net=net, num_vehicles=6,
+                           epochs=3, eval_every=3, eval_samples=200,
+                           local_steps=2, batch_size=16, p1_steps=40, seed=2)
+    res = run_simulation(cfg, dataset=tiny_ds)
+    assert np.isfinite(res.final_accuracy())
+
+
+def test_dds_transformer_train_step_integration():
+    """The launch-layer DDS train step on a reduced transformer: loss finite,
+    state matrix on simplex, params move."""
+    from jax.sharding import Mesh
+    from repro.configs import get_config
+    from repro.launch import steps as steps_lib
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1, 1),
+                ("vehicle", "fsdp", "model"))
+    ts = steps_lib.build_dds_train_step(cfg, mesh, lr=1e-3, remat=False, p1_steps=40)
+    v = 4
+    params, opt_state, sm = steps_lib.init_train_state(cfg, v, jax.random.PRNGKey(0))
+    contact = jnp.asarray(np.minimum(np.eye(v) + np.roll(np.eye(v), 1, 1)
+                                     + np.roll(np.eye(v), -1, 1), 1), jnp.float32)
+    target = jnp.ones((v,)) / v
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (v, 2, 16), 0,
+                                cfg.true_vocab_size)
+    step = jax.jit(ts.fn)
+    p2, o2, sm2, m = step(params, opt_state, sm, tokens, contact, target,
+                          jax.random.PRNGKey(2))
+    assert np.isfinite(float(m["loss"]))
+    np.testing.assert_allclose(np.asarray(sm2).sum(1), 1.0, atol=1e-5)

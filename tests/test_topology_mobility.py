@@ -1,0 +1,64 @@
+"""Road networks + Manhattan mobility."""
+import numpy as np
+import pytest
+
+from repro.fed import mobility as mob_lib
+from repro.fed import topology as topo
+
+
+@pytest.mark.parametrize("name", ["grid", "random", "spider"])
+def test_networks_connected_and_sized(name):
+    net = topo.make_road_network(name, seed=1)
+    assert net.num_nodes == 100
+    assert net.is_connected()
+
+
+def test_grid_degree_distribution():
+    # paper: degrees 2/3/4 with frequencies {4, 32, 64}
+    net = topo.grid_net()
+    deg = net.degrees()
+    counts = {d: int((deg == d).sum()) for d in (2, 3, 4)}
+    assert counts == {2: 4, 3: 32, 4: 64}
+
+
+def test_random_degrees_in_range():
+    net = topo.random_net(seed=0)
+    deg = net.degrees()
+    assert deg.min() >= 1 and deg.max() <= 5
+
+
+def test_spider_structure():
+    net = topo.spider_net()
+    # inner/outer ring radii
+    r = np.linalg.norm(net.positions, axis=1)
+    assert abs(r.min() - 100) < 1e-6 and abs(r.max() - 1000) < 1e-6
+
+
+def test_contact_matrix_symmetric_with_selfloops():
+    r = np.random.default_rng(0)
+    pos = r.uniform(0, 500, size=(20, 2))
+    c = topo.contact_matrix(pos, comm_range=100)
+    assert (c == c.T).all()
+    assert (np.diag(c) == 1).all()
+
+
+def test_mobility_stays_on_network_and_is_deterministic():
+    net = topo.grid_net()
+    cfg = mob_lib.MobilityConfig(num_vehicles=30, seed=42)
+    m1 = mob_lib.ManhattanMobility(net, cfg)
+    m2 = mob_lib.ManhattanMobility(net, cfg)
+    for _ in range(5):
+        c1 = m1.step()
+        c2 = m2.step()
+        np.testing.assert_array_equal(c1, c2)
+        pos = m1.positions()
+        assert (pos >= -1).all() and (pos <= 901).all()  # inside the grid bbox
+
+
+def test_contact_schedule_shape():
+    net = topo.grid_net()
+    cfg = mob_lib.MobilityConfig(num_vehicles=10, seed=0)
+    sched = mob_lib.contact_schedule(net, cfg, 4)
+    assert sched.shape == (4, 10, 10)
+    for t in range(4):
+        assert (sched[t] == sched[t].T).all()
