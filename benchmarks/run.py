@@ -1,8 +1,13 @@
 """Benchmark orchestrator: one module per paper figure/table + the roofline
-and kernel microbenchmarks. Prints CSV blocks per benchmark.
+and kernel microbenchmarks (incl. the fused-engine vs legacy-loop
+comparison) + the scenario sweep. Prints CSV blocks per benchmark.
 
-  PYTHONPATH=src python -m benchmarks.run               # everything
-  PYTHONPATH=src python -m benchmarks.run --only fig8_mnist kernel_micro
+With the package installed (pip install -e .), from the repo root:
+
+  python -m benchmarks.run                     # everything
+  python -m benchmarks.run --only fig8_mnist kernel_micro sweep_scenarios
+
+(from a bare checkout, prefix with PYTHONPATH=src)
 """
 from __future__ import annotations
 
@@ -11,7 +16,7 @@ import time
 
 from . import (fig2_cdf, fig3_correlation, fig6_7_cifar, fig8_mnist,
                fig9_epochs_to_target, fig10_consensus, kernel_micro,
-               roofline_table)
+               roofline_table, sweep_scenarios)
 
 BENCHMARKS = {
     "fig2_cdf": fig2_cdf.main,
@@ -22,6 +27,7 @@ BENCHMARKS = {
     "fig10_consensus": fig10_consensus.main,
     "kernel_micro": kernel_micro.main,
     "roofline_table": roofline_table.main,
+    "sweep_scenarios": sweep_scenarios.main,
 }
 
 

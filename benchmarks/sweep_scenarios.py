@@ -1,0 +1,31 @@
+"""Scenario sweep benchmark: the Fig. 6-10 grid axes through the sweep
+runner (repro.launch.sweep) at CPU-tractable scale.
+
+One run_sweep call covers road-net x algorithm scenarios with the engine
+vmapped over seeds — the CSV reports seed-aggregated final accuracy and the
+per-scenario wall time, demonstrating the one-call reproduction path.
+"""
+from __future__ import annotations
+
+from repro.fed.simulator import SimulationConfig
+from repro.launch import sweep as sweep_lib
+
+from .common import dataset
+
+
+def main() -> list[str]:
+    base = SimulationConfig(
+        dataset="mnist", num_vehicles=8, epochs=20, local_steps=2,
+        batch_size=16, eval_every=10, eval_samples=400, p1_steps=40, lr=0.15)
+    spec = sweep_lib.SweepSpec(
+        road_nets=("grid", "spider"),
+        distributions=("balanced_noniid",),
+        algorithms=("dds", "dfl"),
+        seeds=(0, 1),
+        base=base)
+    results = sweep_lib.run_sweep(spec, dataset=dataset("mnist"))
+    return sweep_lib.summary_rows(results)
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

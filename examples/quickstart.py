@@ -3,9 +3,12 @@
 Ten vehicles drive a grid road network; each holds a non-IID shard of
 (synthetic) MNIST; every global epoch they exchange models with whoever is
 in radio range, choose aggregation weights by minimizing the KL divergence
-of their state vectors (the paper's P1), and take local SGD steps.
+of their state vectors (the paper's P1), and take local SGD steps. All 30
+epochs run fused on-device in one lax.scan (the default engine; set
+use_scan_engine=False for the legacy per-epoch loop).
 
-  PYTHONPATH=src python examples/quickstart.py
+  python examples/quickstart.py          # pip install -e . first,
+                                         # or prefix with PYTHONPATH=src
 """
 import sys
 

@@ -1,0 +1,1 @@
+"""Offline-container compatibility shims (see hypothesis_fallback)."""

@@ -1,0 +1,152 @@
+"""Deterministic fallback for the ``hypothesis`` property-testing library.
+
+The offline container does not bundle ``hypothesis`` (it is a declared test
+dependency in pyproject.toml and is used for real in CI). So the property
+tests still *run* offline, ``tests/conftest.py`` installs this module under
+the ``hypothesis`` name when the real library is missing. It implements only
+the API surface the test-suite touches — ``given``/``settings`` plus the
+``integers``/``floats``/``booleans``/``sampled_from``/``just``/``tuples``/
+``lists`` strategies and ``hypothesis.extra.numpy.arrays`` — as a fixed-seed
+random-example loop: no shrinking, no database, no deadline handling, but
+the same assertions exercised over the same kinds of inputs.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """A strategy is just a draw function ``rng -> value``."""
+
+    def __init__(self, draw):
+        self.draw = draw
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self.draw(rng)))
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kwargs):
+    lo, hi = float(min_value), float(max_value)
+    return Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements):
+    pool = list(elements)
+    return Strategy(lambda rng: pool[int(rng.integers(0, len(pool)))])
+
+
+def just(value):
+    return Strategy(lambda rng: value)
+
+
+def tuples(*strategies):
+    return Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=10, **_kwargs):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+def arrays(dtype, shape, elements=None, **_kwargs):
+    if isinstance(shape, int):
+        shape = (shape,)
+    size = int(np.prod(shape)) if shape else 1
+
+    def draw(rng):
+        if elements is None:
+            flat = rng.uniform(0.0, 1.0, size=size)
+        else:
+            flat = np.array([elements.draw(rng) for _ in range(size)])
+        return np.asarray(flat).reshape(shape).astype(dtype)
+
+    return Strategy(draw)
+
+
+def given(*strategies, **kw_strategies):
+    """Run the wrapped test over ``max_examples`` drawn example tuples.
+
+    The example stream is seeded per-test (stable across runs) so failures
+    reproduce; the falsifying example is attached to the raised error since
+    there is no shrinker.
+    """
+
+    def decorate(fn):
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                args = tuple(s.draw(rng) for s in strategies)
+                kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as err:
+                    raise AssertionError(
+                        f"falsifying example {i} (hypothesis fallback): "
+                        f"args={args!r} kwargs={kwargs!r}"
+                    ) from err
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kwargs):
+    """Record max_examples on the (already ``given``-wrapped) test."""
+
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ submodules) in sys.modules."""
+    if "hypothesis" in sys.modules:
+        return
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.Strategy = Strategy
+    hyp.__is_fallback__ = True
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "just",
+                 "tuples", "lists"):
+        setattr(st, name, globals()[name])
+
+    extra = types.ModuleType("hypothesis.extra")
+    extra_np = types.ModuleType("hypothesis.extra.numpy")
+    extra_np.arrays = arrays
+    extra.numpy = extra_np
+
+    hyp.strategies = st
+    hyp.extra = extra
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = extra_np

@@ -43,6 +43,44 @@ def sample_batches(data: FederatedData, rng: Array, local_steps: int, batch_size
     return data.x[idx], data.y[idx]
 
 
+def stack_federated_data(datas: list[FederatedData], seed: int = 0) -> FederatedData:
+    """Stack per-seed FederatedData along a leading seed axis for the fused
+    engine's ``run_seeds`` vmap.
+
+    The train tensors must be shared across seeds (one dataset, many
+    partitions) and are NOT stacked — vmap broadcasts them (in_axes None).
+    Index tables may have different widths (unbalanced partitions); short
+    tables are padded to the common width by resampling each row's own
+    entries, the same distribution-preserving trick as partition
+    ``pad_to_uniform``.
+    """
+    x, y = datas[0].x, datas[0].y
+    # catch per-seed datasets early: broadcasting datas[0].x across seeds is
+    # only sound when every seed partitioned the SAME train tensors (identity
+    # check is too strict — each context converts numpy -> device anew)
+    y_host = np.asarray(y)
+    if any(d.x.shape != x.shape or not np.array_equal(np.asarray(d.y), y_host)
+           for d in datas[1:]):
+        raise ValueError("stack_federated_data requires one dataset shared "
+                         "across seeds (per-seed train tensors differ)")
+    width = max(int(d.index_table.shape[1]) for d in datas)
+    rng = np.random.default_rng(seed)
+    tables = []
+    for d in datas:
+        table = np.asarray(d.index_table)
+        if table.shape[1] < width:
+            picks = rng.integers(0, table.shape[1],
+                                 size=(table.shape[0], width - table.shape[1]))
+            table = np.concatenate(
+                [table, np.take_along_axis(table, picks, axis=1)], axis=1)
+        tables.append(table)
+    return FederatedData(
+        x=x, y=y,
+        index_table=jnp.asarray(np.stack(tables)),
+        counts=jnp.stack([d.counts for d in datas]),
+    )
+
+
 @partial(jax.jit, static_argnames=("batch_size",))
 def sample_full_batches(data: FederatedData, rng: Array, batch_size: int):
     """One batch per vehicle of ``batch_size`` samples drawn from its

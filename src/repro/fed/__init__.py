@@ -1,10 +1,12 @@
-from . import metrics, mobility, partition, simulator, topology
+from . import engine, metrics, mobility, partition, simulator, topology
+from .engine import ContactStream, EngineContext, run_seeds
 from .mobility import ManhattanMobility, MobilityConfig, contact_schedule
 from .simulator import SimulationConfig, SimulationResult, run_simulation
 from .topology import RoadNetwork, contact_matrix, make_road_network
 
 __all__ = [
-    "metrics", "mobility", "partition", "simulator", "topology",
+    "engine", "metrics", "mobility", "partition", "simulator", "topology",
+    "ContactStream", "EngineContext", "run_seeds",
     "ManhattanMobility", "MobilityConfig", "contact_schedule",
     "SimulationConfig", "SimulationResult", "run_simulation",
     "RoadNetwork", "contact_matrix", "make_road_network",

@@ -1,0 +1,446 @@
+"""Fused multi-epoch simulation engine: whole epoch windows in one lax.scan.
+
+The legacy ``run_simulation`` drove every global epoch through a host Python
+loop (host mobility step -> one jitted round -> host sync), so dispatch
+overhead dominated the paper's multi-hundred-epoch runs and scenario sweeps
+ran strictly serially. This module restructures the hot path:
+
+* **Contact-window precompute** — the Manhattan mobility process stays
+  host-side (it is inherently sequential) but is batched up front:
+  ``ContactStream.window(T)`` advances T epochs of motion and converts the
+  stacked [T, K, 2] position snapshots into one [T, K, K] contact tensor
+  (``topology.contact_matrices`` + ``extensions.contact_window``), including
+  RSU relays and Bernoulli edge drops. The stream consumes its RNGs epoch by
+  epoch, so trajectories are independent of window chunking.
+
+* **Scanned round** — ``lax.scan`` runs the whole window on device: per step
+  it folds fresh PRNG keys off the scan carry, gathers per-vehicle
+  minibatches device-side (``data.pipeline``), applies the algorithm round
+  (DDS / DFL / SP — local training, gossip model mix, state-vector update),
+  and evaluates accuracy + consensus distance *in-scan* under ``lax.cond``
+  on the epochs the eval mask selects. One dispatch per window instead of
+  3-4 per epoch.
+
+* **Seed vmap** — ``run_seeds`` stacks S independent federations (their own
+  partitions, mobility traces, and model inits) and vmaps the same scanned
+  window over the seed axis; the scenario sweep runner
+  (``repro.launch.sweep``) maps this over road-net x distribution x
+  algorithm grids.
+
+``simulator.run_simulation`` is now a thin wrapper over this engine; the
+legacy per-epoch loop survives behind ``SimulationConfig.use_scan_engine =
+False`` as the parity reference (tests/test_engine.py holds the two paths to
+identical eval trajectories).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import aggregation, baselines, dfl_dds, state_vector
+from ..data import datasets as data_lib
+from ..data import pipeline
+from ..models import cnn as cnn_lib
+from ..optim import apply_updates, sgd
+from . import extensions as extensions_lib
+from . import mobility as mobility_lib
+from . import partition as partition_lib
+from . import topology as topology_lib
+
+Array = jax.Array
+
+
+@dataclass
+class SimulationConfig:
+    algorithm: str = "dds"            # dds | dfl | sp
+    dataset: str = "mnist"            # mnist | cifar10
+    road_net: str = "grid"            # grid | random | spider
+    distribution: str = "balanced_noniid"  # balanced_noniid | unbalanced_iid
+    num_vehicles: int = 100
+    epochs: int = 300
+    lr: float = 0.1                   # paper Table II
+    local_steps: int = 8              # E
+    batch_size: int = 80              # B
+    comm_range: float = 100.0
+    epoch_duration: float = 30.0
+    eval_every: int = 10
+    eval_samples: int = 2000
+    p1_steps: int = 200
+    p1_step_size: float = 2.0
+    seed: int = 0
+    mix_params_fn: Callable = aggregation.mix_params
+    # extensions (paper Sec. V-C / Sec. VII): data-less static RSUs join the
+    # federation as relays; V2V exchanges fail with probability p_drop
+    num_rsus: int = 0
+    p_drop: float = 0.0
+    # engine controls: the fused scan engine is the default; the legacy
+    # per-epoch host loop remains as the parity reference. window_size = 0
+    # scans the whole run in one dispatch; > 0 chunks it (bounds host memory
+    # for the [T, K, K] contact tensor on very long runs).
+    use_scan_engine: bool = True
+    window_size: int = 0
+
+
+@dataclass
+class SimulationResult:
+    config: SimulationConfig
+    epochs_evaluated: list[int] = field(default_factory=list)
+    avg_accuracy: list[float] = field(default_factory=list)
+    vehicle_accuracy: list[np.ndarray] = field(default_factory=list)   # [K] per eval
+    entropy: list[np.ndarray] = field(default_factory=list)            # [K] per eval
+    kl_divergence: list[np.ndarray] = field(default_factory=list)      # [K] per eval
+    consensus_distance: list[float] = field(default_factory=list)
+    wall_time: float = 0.0
+
+    def final_accuracy(self) -> float:
+        return self.avg_accuracy[-1] if self.avg_accuracy else float("nan")
+
+
+def make_local_train_fn(loss_fn, optimizer):
+    """Per-vehicle E local SGD steps via lax.scan (Eq. 3)."""
+
+    def local_train(params, opt_state, batch, rng):
+        xs, ys = batch  # [E, B, ...], [E, B]
+        steps = xs.shape[0]
+        rngs = jax.random.split(rng, steps)
+
+        def step(carry, inp):
+            p, s = carry
+            x, y, r = inp
+            loss, grads = jax.value_and_grad(loss_fn)(p, x, y, r)
+            updates, s = optimizer.update(grads, s, p)
+            return (apply_updates(p, updates), s), loss
+
+        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), (xs, ys, rngs))
+        return params, opt_state, {"loss": jnp.mean(losses)}
+
+    return local_train
+
+
+def _partition(ds, cfg: SimulationConfig):
+    if cfg.distribution == "balanced_noniid":
+        idx = partition_lib.balanced_noniid(ds.train_y, cfg.num_vehicles, seed=cfg.seed)
+    elif cfg.distribution == "unbalanced_iid":
+        sizes = (125, 375, 1125) if "cifar" in ds.name else (150, 450, 1350)
+        idx = partition_lib.unbalanced_iid(len(ds.train_y), cfg.num_vehicles,
+                                           size_choices=sizes, seed=cfg.seed)
+    else:
+        raise ValueError(cfg.distribution)
+    return idx
+
+
+class ContactStream:
+    """Host-side mobility -> batched contact windows.
+
+    ``window(T)`` advances the Manhattan process T epochs and returns the
+    [T, Ktot, Ktot] contact tensor (RSU columns appended, dropped edges
+    removed). Both RNG streams (mobility, drops) advance one epoch at a
+    time, so ``window(a); window(b)`` equals ``window(a + b)`` row for row.
+    """
+
+    def __init__(self, cfg: SimulationConfig, net: topology_lib.RoadNetwork):
+        self.cfg = cfg
+        self.mob = mobility_lib.ManhattanMobility(net, mobility_lib.MobilityConfig(
+            num_vehicles=cfg.num_vehicles, epoch_duration=cfg.epoch_duration,
+            comm_range=cfg.comm_range, seed=cfg.seed))
+        self.rsu_pos = (extensions_lib.place_rsus(net, cfg.num_rsus, seed=cfg.seed)
+                        if cfg.num_rsus else None)
+        self.drop_rng = np.random.default_rng(cfg.seed + 7)
+
+    def window(self, num_epochs: int) -> np.ndarray:
+        positions = self.mob.advance_positions(num_epochs)
+        return extensions_lib.contact_window(
+            positions, self.rsu_pos, self.cfg.comm_range, self.cfg.p_drop,
+            self.drop_rng)
+
+
+@dataclass
+class EngineContext:
+    """Everything one federation run needs, built once per (config, seed).
+
+    ``round_fn(state, contacts, target, batch, rng, fed_data)`` applies one
+    algorithm round (the extra ``fed_data`` arg lets DFL read per-seed sample
+    counts under vmap); ``sample_fn(fed_data, key)`` draws the per-epoch
+    device-side batch; ``model_of(state)`` extracts the evaluable parameter
+    stack (SP de-biases by the push-sum weights).
+    """
+    cfg: SimulationConfig
+    total_nodes: int
+    fed_data: pipeline.FederatedData
+    target: Array
+    local_mask: Array | None
+    contacts: ContactStream
+    init_state: Any
+    init_rng: Array
+    round_fn: Callable
+    sample_fn: Callable
+    model_of: Callable
+    eval_fn: Callable
+    _jit_cache: dict = field(default_factory=dict, repr=False)
+
+    @property
+    def window_jit(self):
+        if "window" not in self._jit_cache:
+            self._jit_cache["window"] = jax.jit(build_window_fn(self))
+        return self._jit_cache["window"]
+
+    @property
+    def round_jit(self):
+        if "round" not in self._jit_cache:
+            self._jit_cache["round"] = jax.jit(self.round_fn)
+        return self._jit_cache["round"]
+
+    @property
+    def eval_jit(self):
+        if "eval" not in self._jit_cache:
+            self._jit_cache["eval"] = jax.jit(self.eval_fn)
+        return self._jit_cache["eval"]
+
+
+def build_context(cfg: SimulationConfig, dataset=None) -> EngineContext:
+    """Shared setup for both the fused engine and the legacy loop: data
+    partition, mobility stream, model init, and the algorithm round."""
+    ds = dataset or data_lib.load_dataset(cfg.dataset, seed=cfg.seed)
+    init_fn, loss_fn, accuracy_fn = cnn_lib.make_cnn_task(ds.name)
+
+    idx = _partition(ds, cfg)
+    # extension: RSUs are extra data-less participants appended after vehicles
+    total_nodes = cfg.num_vehicles + cfg.num_rsus
+    if cfg.num_rsus:
+        idx = idx + [np.array([0])] * cfg.num_rsus  # dummy index, zero weight
+    dense, counts = partition_lib.pad_to_uniform(idx, seed=cfg.seed)
+    if cfg.num_rsus:
+        counts = counts.copy()
+        counts[cfg.num_vehicles:] = 0
+    fed_data = pipeline.make_federated_data(ds.train_x, ds.train_y, dense, counts)
+    target = state_vector.target_state(jnp.asarray(counts))
+    local_mask = (jnp.asarray(extensions_lib.rsu_local_step_mask(
+        cfg.num_vehicles, cfg.num_rsus)) if cfg.num_rsus else None)
+
+    net = topology_lib.make_road_network(cfg.road_net, seed=cfg.seed)
+    contacts = ContactStream(cfg, net)
+
+    # identical random init on every vehicle (paper Alg. 1 line 1)
+    rng = jax.random.PRNGKey(cfg.seed)
+    rng, kinit = jax.random.split(rng)
+    params0 = init_fn(kinit)
+    params_stack = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p, (total_nodes,) + p.shape).copy(), params0)
+
+    optimizer = sgd(cfg.lr)
+    local_train_fn = make_local_train_fn(loss_fn, optimizer)
+    opt_stack = jax.vmap(optimizer.init)(params_stack)
+
+    eval_x = jnp.asarray(ds.test_x[: cfg.eval_samples])
+    eval_y = jnp.asarray(ds.test_y[: cfg.eval_samples])
+    eval_fn = jax.vmap(lambda p: accuracy_fn(p, eval_x, eval_y))
+
+    if cfg.algorithm in ("dds", "dfl"):
+        init_state = dfl_dds.init_federation(params_stack, opt_stack, total_nodes)
+        sample_fn = partial(pipeline.sample_batches, local_steps=cfg.local_steps,
+                            batch_size=cfg.batch_size)
+        model_of = lambda s: s.params  # noqa: E731
+
+        if cfg.algorithm == "dds":
+            base = partial(
+                dfl_dds.dds_round, local_train_fn=local_train_fn, lr=cfg.lr,
+                local_steps=cfg.local_steps, p1_steps=cfg.p1_steps,
+                p1_step_size=cfg.p1_step_size, mix_params_fn=cfg.mix_params_fn,
+                local_mask=local_mask)
+
+            def round_fn(state, contacts_t, tgt, batch, key, fd):
+                return base(state, contacts_t, tgt, batch, key)
+        else:
+            def round_fn(state, contacts_t, tgt, batch, key, fd):
+                return baselines.dfl_round(
+                    state, contacts_t, tgt, batch, key,
+                    local_train_fn=local_train_fn,
+                    sample_counts=fd.counts.astype(jnp.float32), lr=cfg.lr,
+                    local_steps=cfg.local_steps, mix_params_fn=cfg.mix_params_fn,
+                    local_mask=local_mask)
+
+    elif cfg.algorithm == "sp":
+        init_state = baselines.init_push_sum(params_stack, total_nodes)
+        model_of = baselines.sp_model
+
+        def grad_fn(params, batch, key):
+            x, y = batch
+            loss, grads = jax.value_and_grad(loss_fn)(params, x, y, key)
+            return grads, {"loss": loss}
+
+        # SP uses the full local dataset per iteration (paper Sec. VI-A.5);
+        # cap the materialized batch at 512 resampled-from-own-partition
+        # samples — an unbiased full-batch estimate that keeps single-core
+        # benchmark runs tractable. The cap reads the (static) index-table
+        # width at trace time so it also holds under the run_seeds vmap,
+        # where tables are padded to a common width.
+        def sample_fn(fd, key):
+            full_bs = min(int(fd.index_table.shape[-1]), 512)
+            return pipeline.sample_full_batches(fd, key, full_bs)
+
+        def round_fn(state, contacts_t, tgt, batch, key, fd):
+            return baselines.sp_round(state, contacts_t, tgt, batch, key,
+                                      grad_fn=grad_fn, lr=cfg.lr)
+    else:
+        raise ValueError(cfg.algorithm)
+
+    return EngineContext(
+        cfg=cfg, total_nodes=total_nodes, fed_data=fed_data, target=target,
+        local_mask=local_mask, contacts=contacts, init_state=init_state,
+        init_rng=rng, round_fn=round_fn, sample_fn=sample_fn,
+        model_of=model_of, eval_fn=eval_fn)
+
+
+def build_window_fn(ctx: EngineContext) -> Callable:
+    """The fused window: scan the algorithm round over [T, K, K] contacts.
+
+    Returns ``window(state, rng, fed_data, target, contacts, eval_mask) ->
+    (state, rng, traj)`` where ``traj`` stacks per-epoch diagnostics;
+    accuracy / consensus rows are NaN on epochs the mask skips (lax.cond
+    keeps the eval compute off those steps entirely).
+    """
+    round_fn, sample_fn = ctx.round_fn, ctx.sample_fn
+    model_of, eval_fn = ctx.model_of, ctx.eval_fn
+    total_nodes = ctx.total_nodes
+
+    def window(state, rng, fed_data, target, contacts, eval_mask):
+        def evaluate(st):
+            model = model_of(st)
+            return (eval_fn(model),
+                    aggregation.consensus_distance(model).astype(jnp.float32))
+
+        def skip(st):
+            return (jnp.full((total_nodes,), jnp.nan, jnp.float32),
+                    jnp.float32(jnp.nan))
+
+        def step(carry, inp):
+            st, key = carry
+            contacts_t, do_eval = inp
+            key, kb, kr = jax.random.split(key, 3)
+            batch = sample_fn(fed_data, kb)
+            st, diags = round_fn(st, contacts_t, target, batch, kr, fed_data)
+            accs, consensus = jax.lax.cond(do_eval, evaluate, skip, st)
+            out = {
+                "accuracy": accs,
+                "consensus": consensus,
+                "entropy": diags["entropy"],
+                "kl_divergence": diags["kl_divergence"],
+                "loss": jnp.mean(diags["loss"]),
+            }
+            return (st, key), out
+
+        (state, rng), traj = jax.lax.scan(step, (state, rng), (contacts, eval_mask))
+        return state, rng, traj
+
+    return window
+
+
+def _default_window(cfg: SimulationConfig, progress: bool) -> int:
+    """Resolve the scan window length. With ``window_size = 0`` the whole run
+    fuses into one scan — except under ``progress``, where windows align to
+    the eval cadence so progress lines stream like the legacy loop did
+    (trajectories are chunk-invariant, so only dispatch granularity changes).
+    """
+    if cfg.window_size > 0:
+        return cfg.window_size
+    if progress:
+        return max(cfg.eval_every, 1)
+    return max(cfg.epochs, 1)
+
+
+def _eval_mask(cfg: SimulationConfig, start: int, length: int) -> np.ndarray:
+    """Host-side eval schedule for window epochs [start, start + length)."""
+    epochs = start + np.arange(length)
+    return ((epochs + 1) % cfg.eval_every == 0) | (epochs == cfg.epochs - 1)
+
+
+def _append_window(result: SimulationResult, traj, mask: np.ndarray, start: int,
+                   num_vehicles: int, progress: bool) -> None:
+    acc = np.asarray(traj["accuracy"])
+    ent = np.asarray(traj["entropy"])
+    kl = np.asarray(traj["kl_divergence"])
+    consensus = np.asarray(traj["consensus"])
+    for i in np.nonzero(mask)[0]:
+        accs = acc[i, :num_vehicles]
+        result.epochs_evaluated.append(start + int(i) + 1)
+        result.avg_accuracy.append(float(accs.mean()))
+        result.vehicle_accuracy.append(accs)
+        result.entropy.append(ent[i])
+        result.kl_divergence.append(kl[i])
+        result.consensus_distance.append(float(consensus[i]))
+        if progress:
+            print(f"  epoch {start + int(i) + 1:4d}  avg_acc={accs.mean():.4f}  "
+                  f"min={accs.min():.4f}  max={accs.max():.4f}", flush=True)
+
+
+def run_with_context(ctx: EngineContext, progress: bool = False) -> SimulationResult:
+    """Drive one federation through the fused engine, window by window."""
+    cfg = ctx.cfg
+    t0 = time.time()
+    result = SimulationResult(config=cfg)
+    window_size = _default_window(cfg, progress)
+    state, rng = ctx.init_state, ctx.init_rng
+    for start in range(0, cfg.epochs, window_size):
+        length = min(window_size, cfg.epochs - start)
+        contacts = jnp.asarray(ctx.contacts.window(length))
+        mask = _eval_mask(cfg, start, length)
+        state, rng, traj = ctx.window_jit(
+            state, rng, ctx.fed_data, ctx.target, contacts, jnp.asarray(mask))
+        _append_window(result, traj, mask, start, cfg.num_vehicles, progress)
+    result.wall_time = time.time() - t0
+    return result
+
+
+def run(cfg: SimulationConfig, dataset=None, progress: bool = False) -> SimulationResult:
+    """Build a context and run it through the fused engine."""
+    return run_with_context(build_context(cfg, dataset=dataset), progress=progress)
+
+
+def run_seeds(cfg: SimulationConfig, seeds, dataset=None,
+              progress: bool = False) -> list[SimulationResult]:
+    """Run S independent federations (seeded partitions, mobility traces and
+    inits) through ONE vmapped scan — the engine's seed axis.
+
+    The dataset is shared across seeds (loaded once from ``cfg`` when not
+    given); per-seed index tables are padded to a common width so they stack.
+    Returns one ``SimulationResult`` per seed, in ``seeds`` order.
+    """
+    seeds = list(seeds)
+    t0 = time.time()
+    ds = dataset or data_lib.load_dataset(cfg.dataset, seed=cfg.seed)
+    ctxs = [build_context(replace(cfg, seed=int(s)), dataset=ds) for s in seeds]
+
+    fed_stack = pipeline.stack_federated_data([c.fed_data for c in ctxs],
+                                              seed=cfg.seed)
+    states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                    *[c.init_state for c in ctxs])
+    rngs = jnp.stack([c.init_rng for c in ctxs])
+    targets = jnp.stack([c.target for c in ctxs])
+
+    window_vmap = jax.jit(jax.vmap(
+        build_window_fn(ctxs[0]),
+        in_axes=(0, 0, pipeline.FederatedData(None, None, 0, 0), 0, 0, None)))
+
+    results = [SimulationResult(config=c.cfg) for c in ctxs]
+    window_size = _default_window(cfg, progress)
+    for start in range(0, cfg.epochs, window_size):
+        length = min(window_size, cfg.epochs - start)
+        contacts = jnp.asarray(np.stack([c.contacts.window(length) for c in ctxs]))
+        mask = _eval_mask(cfg, start, length)
+        states, rngs, traj = window_vmap(states, rngs, fed_stack, targets,
+                                         contacts, jnp.asarray(mask))
+        traj = jax.tree_util.tree_map(np.asarray, traj)
+        for s_i, result in enumerate(results):
+            per_seed = jax.tree_util.tree_map(lambda x: x[s_i], traj)
+            _append_window(result, per_seed, mask, start, cfg.num_vehicles,
+                           progress)
+    wall = time.time() - t0
+    for result in results:
+        result.wall_time = wall
+    return results

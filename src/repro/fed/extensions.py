@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .topology import RoadNetwork, contact_matrix
+from .topology import RoadNetwork, contact_matrices, contact_matrix
 
 
 def place_rsus(net: RoadNetwork, num_rsus: int, seed: int = 0) -> np.ndarray:
@@ -40,12 +40,41 @@ def rsu_local_step_mask(num_vehicles: int, num_rsus: int) -> np.ndarray:
 
 def drop_contacts(contacts: np.ndarray, p_drop: float, rng: np.random.Generator) -> np.ndarray:
     """Symmetric Bernoulli edge dropping; self-loops survive."""
+    return drop_contacts_window(contacts[None], p_drop, rng)[0]
+
+
+def drop_contacts_window(contacts: np.ndarray, p_drop: float,
+                         rng: np.random.Generator) -> np.ndarray:
+    """Batched ``drop_contacts`` over a [T, K, K] window.
+
+    Consumes the SAME generator stream as T successive ``drop_contacts``
+    calls (numpy Generators fill arrays sequentially), so results are
+    independent of how a run is chunked into windows.
+    """
     if p_drop <= 0:
         return contacts
-    k = contacts.shape[0]
-    keep = rng.random((k, k)) >= p_drop
-    keep = np.triu(keep, 1)
-    keep = keep | keep.T
+    t, k, _ = contacts.shape
+    keep = rng.random((t, k, k)) >= p_drop
+    keep = np.triu(keep, 1)                     # applies to the last two dims
+    keep = keep | keep.transpose(0, 2, 1)
     out = contacts * keep
-    np.fill_diagonal(out, 1.0)
+    out[:, np.arange(k), np.arange(k)] = 1.0
     return out.astype(contacts.dtype)
+
+
+def contact_window(positions: np.ndarray, rsu_positions: np.ndarray | None,
+                   comm_range: float, p_drop: float,
+                   drop_rng: np.random.Generator) -> np.ndarray:
+    """[T, K, 2] vehicle position snapshots -> [T, K(+R), K(+R)] contacts.
+
+    The batched composition of ``contacts_with_rsus`` and ``drop_contacts``:
+    static RSU positions are appended to every snapshot, the whole window's
+    pairwise distances are computed in one shot, then unreliable V2V edges
+    are dropped. This is the host-side precompute feeding the fused engine.
+    """
+    if rsu_positions is not None and len(rsu_positions):
+        rsus = np.broadcast_to(rsu_positions,
+                               (positions.shape[0],) + rsu_positions.shape)
+        positions = np.concatenate([positions, rsus], axis=1)
+    contacts = contact_matrices(positions, comm_range)
+    return drop_contacts_window(contacts, p_drop, drop_rng)

@@ -15,7 +15,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .topology import RoadNetwork, contact_matrix
+from .topology import RoadNetwork, contact_matrices, contact_matrix
 
 
 @dataclass
@@ -76,8 +76,8 @@ class ManhattanMobility:
         p_dst = self.net.positions[self.dst]
         return p_src + self.frac[:, None] * (p_dst - p_src)
 
-    def step(self) -> np.ndarray:
-        """Advance ``epoch_duration`` seconds; return the contact matrix."""
+    def _advance_epoch(self) -> None:
+        """Advance every vehicle by ``epoch_duration`` seconds of motion."""
         remaining = self.speed * self.cfg.epoch_duration
         remaining = remaining.copy()
         for k in range(self.cfg.num_vehicles):
@@ -93,10 +93,26 @@ class ManhattanMobility:
                     nxt = self._turn(u, v)
                     self.src[k], self.dst[k] = v, nxt
                     self.frac[k] = 0.0
+
+    def advance_positions(self, num_epochs: int) -> np.ndarray:
+        """Advance ``num_epochs`` epochs; return the [T, K, 2] position
+        snapshots (one per epoch). The motion process is inherently
+        sequential, but collecting a window of snapshots up front lets the
+        distance -> contact conversion run batched (topology.contact_matrices)
+        and feeds the fused scan engine one [T, K, K] tensor per window."""
+        out = np.empty((num_epochs, self.cfg.num_vehicles, 2), dtype=np.float64)
+        for t in range(num_epochs):
+            self._advance_epoch()
+            out[t] = self.positions()
+        return out
+
+    def step(self) -> np.ndarray:
+        """Advance ``epoch_duration`` seconds; return the contact matrix."""
+        self._advance_epoch()
         return contact_matrix(self.positions(), self.cfg.comm_range)
 
 
 def contact_schedule(net: RoadNetwork, cfg: MobilityConfig, num_epochs: int) -> np.ndarray:
     """Pre-generate [T, K, K] contact matrices for ``num_epochs`` rounds."""
     mob = ManhattanMobility(net, cfg)
-    return np.stack([mob.step() for _ in range(num_epochs)])
+    return contact_matrices(mob.advance_positions(num_epochs), cfg.comm_range)

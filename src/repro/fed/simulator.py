@@ -4,210 +4,58 @@ Wires together: road network + Manhattan mobility (time-varying contact
 graphs), partitioned federated data, per-vehicle local training, and one of
 the three algorithms {DFL-DDS, DFL (decentralized FedAvg), SP
 (subgradient-push)}. The whole federation state is stacked on a leading
-vehicle axis, so one jitted round == one global epoch for all K vehicles.
+vehicle axis.
+
+``run_simulation`` is a thin wrapper over the fused scan engine
+(``repro.fed.engine``): setup is shared via ``engine.build_context``, and by
+default whole epoch windows run inside one jitted ``lax.scan``. The original
+per-epoch host loop is kept here behind ``SimulationConfig.use_scan_engine =
+False`` — it is the parity reference the engine is tested against
+(tests/test_engine.py) and the baseline for the engine-vs-loop benchmark
+(benchmarks/kernel_micro.py).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import aggregation, baselines, dfl_dds, state_vector
-from ..data import datasets as data_lib
-from ..data import pipeline
-from ..models import cnn as cnn_lib
-from ..optim import apply_updates, sgd
-from . import extensions as extensions_lib
-from . import mobility as mobility_lib
-from . import partition as partition_lib
-from . import topology as topology_lib
-
-Array = jax.Array
-
-
-@dataclass
-class SimulationConfig:
-    algorithm: str = "dds"            # dds | dfl | sp
-    dataset: str = "mnist"            # mnist | cifar10
-    road_net: str = "grid"            # grid | random | spider
-    distribution: str = "balanced_noniid"  # balanced_noniid | unbalanced_iid
-    num_vehicles: int = 100
-    epochs: int = 300
-    lr: float = 0.1                   # paper Table II
-    local_steps: int = 8              # E
-    batch_size: int = 80              # B
-    comm_range: float = 100.0
-    epoch_duration: float = 30.0
-    eval_every: int = 10
-    eval_samples: int = 2000
-    p1_steps: int = 200
-    p1_step_size: float = 2.0
-    seed: int = 0
-    mix_params_fn: Callable = aggregation.mix_params
-    # extensions (paper Sec. V-C / Sec. VII): data-less static RSUs join the
-    # federation as relays; V2V exchanges fail with probability p_drop
-    num_rsus: int = 0
-    p_drop: float = 0.0
-
-
-@dataclass
-class SimulationResult:
-    config: SimulationConfig
-    epochs_evaluated: list[int] = field(default_factory=list)
-    avg_accuracy: list[float] = field(default_factory=list)
-    vehicle_accuracy: list[np.ndarray] = field(default_factory=list)   # [K] per eval
-    entropy: list[np.ndarray] = field(default_factory=list)            # [K] per eval
-    kl_divergence: list[np.ndarray] = field(default_factory=list)      # [K] per eval
-    consensus_distance: list[float] = field(default_factory=list)
-    wall_time: float = 0.0
-
-    def final_accuracy(self) -> float:
-        return self.avg_accuracy[-1] if self.avg_accuracy else float("nan")
-
-
-def _make_local_train_fn(loss_fn, optimizer):
-    """Per-vehicle E local SGD steps via lax.scan (Eq. 3)."""
-
-    def local_train(params, opt_state, batch, rng):
-        xs, ys = batch  # [E, B, ...], [E, B]
-        steps = xs.shape[0]
-        rngs = jax.random.split(rng, steps)
-
-        def step(carry, inp):
-            p, s = carry
-            x, y, r = inp
-            loss, grads = jax.value_and_grad(loss_fn)(p, x, y, r)
-            updates, s = optimizer.update(grads, s, p)
-            return (apply_updates(p, updates), s), loss
-
-        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), (xs, ys, rngs))
-        return params, opt_state, {"loss": jnp.mean(losses)}
-
-    return local_train
-
-
-def _partition(ds, cfg: SimulationConfig):
-    if cfg.distribution == "balanced_noniid":
-        idx = partition_lib.balanced_noniid(ds.train_y, cfg.num_vehicles, seed=cfg.seed)
-    elif cfg.distribution == "unbalanced_iid":
-        sizes = (125, 375, 1125) if "cifar" in ds.name else (150, 450, 1350)
-        idx = partition_lib.unbalanced_iid(len(ds.train_y), cfg.num_vehicles,
-                                           size_choices=sizes, seed=cfg.seed)
-    else:
-        raise ValueError(cfg.distribution)
-    return idx
+from ..core import aggregation
+from . import engine as engine_lib
+# re-exports: the public simulation API lives here for backwards
+# compatibility; definitions moved to engine.py with the fused-engine
+# refactor.
+from .engine import (  # noqa: F401
+    EngineContext, SimulationConfig, SimulationResult, make_local_train_fn,
+)
 
 
 def run_simulation(cfg: SimulationConfig, dataset=None, progress: bool = False) -> SimulationResult:
+    ctx = engine_lib.build_context(cfg, dataset=dataset)
+    if cfg.use_scan_engine:
+        return engine_lib.run_with_context(ctx, progress=progress)
+    return run_legacy_loop(ctx, progress=progress)
+
+
+def run_legacy_loop(ctx: EngineContext, progress: bool = False) -> SimulationResult:
+    """The pre-engine path: one host-dispatched jitted round per epoch."""
+    cfg = ctx.cfg
     t0 = time.time()
-    ds = dataset or data_lib.load_dataset(cfg.dataset, seed=cfg.seed)
-    init_fn, loss_fn, accuracy_fn = cnn_lib.make_cnn_task(ds.name)
-
-    idx = _partition(ds, cfg)
-    # extension: RSUs are extra data-less participants appended after vehicles
-    total_nodes = cfg.num_vehicles + cfg.num_rsus
-    if cfg.num_rsus:
-        idx = idx + [np.array([0])] * cfg.num_rsus  # dummy index, zero weight
-    dense, counts = partition_lib.pad_to_uniform(idx, seed=cfg.seed)
-    if cfg.num_rsus:
-        counts = counts.copy()
-        counts[cfg.num_vehicles:] = 0
-    fed_data = pipeline.make_federated_data(ds.train_x, ds.train_y, dense, counts)
-    target = state_vector.target_state(jnp.asarray(counts))
-    local_mask = (jnp.asarray(extensions_lib.rsu_local_step_mask(
-        cfg.num_vehicles, cfg.num_rsus)) if cfg.num_rsus else None)
-
-    # mobility / contact graphs
-    net = topology_lib.make_road_network(cfg.road_net, seed=cfg.seed)
-    mob = mobility_lib.ManhattanMobility(net, mobility_lib.MobilityConfig(
-        num_vehicles=cfg.num_vehicles, epoch_duration=cfg.epoch_duration,
-        comm_range=cfg.comm_range, seed=cfg.seed))
-    rsu_pos = (extensions_lib.place_rsus(net, cfg.num_rsus, seed=cfg.seed)
-               if cfg.num_rsus else None)
-    drop_rng = np.random.default_rng(cfg.seed + 7)
-
-    def next_contacts() -> jnp.ndarray:
-        mob.step()
-        if rsu_pos is not None:
-            c = extensions_lib.contacts_with_rsus(mob.positions(), rsu_pos,
-                                                  cfg.comm_range)
-        else:
-            c = topology_lib.contact_matrix(mob.positions(), cfg.comm_range)
-        c = extensions_lib.drop_contacts(c, cfg.p_drop, drop_rng)
-        return jnp.asarray(c)
-
-    # identical random init on every vehicle (paper Alg. 1 line 1)
-    rng = jax.random.PRNGKey(cfg.seed)
-    rng, kinit = jax.random.split(rng)
-    params0 = init_fn(kinit)
-    params_stack = jax.tree_util.tree_map(
-        lambda p: jnp.broadcast_to(p, (total_nodes,) + p.shape).copy(), params0)
-
-    optimizer = sgd(cfg.lr)
-    local_train_fn = _make_local_train_fn(loss_fn, optimizer)
-    opt_stack = jax.vmap(optimizer.init)(params_stack)
-
-    eval_x = jnp.asarray(ds.test_x[: cfg.eval_samples])
-    eval_y = jnp.asarray(ds.test_y[: cfg.eval_samples])
-    eval_all = jax.jit(jax.vmap(lambda p: accuracy_fn(p, eval_x, eval_y)))
-
     result = SimulationResult(config=cfg)
+    state, rng = ctx.init_state, ctx.init_rng
+    round_fn, eval_all = ctx.round_jit, ctx.eval_jit
 
-    if cfg.algorithm in ("dds", "dfl"):
-        fed = dfl_dds.init_federation(params_stack, opt_stack, total_nodes)
-
-        if cfg.algorithm == "dds":
-            round_fn = jax.jit(partial(
-                dfl_dds.dds_round, local_train_fn=local_train_fn, lr=cfg.lr,
-                local_steps=cfg.local_steps, p1_steps=cfg.p1_steps,
-                p1_step_size=cfg.p1_step_size, mix_params_fn=cfg.mix_params_fn,
-                local_mask=local_mask))
-        else:
-            round_fn = jax.jit(partial(
-                baselines.dfl_round, local_train_fn=local_train_fn,
-                sample_counts=jnp.asarray(counts, jnp.float32), lr=cfg.lr,
-                local_steps=cfg.local_steps, mix_params_fn=cfg.mix_params_fn,
-                local_mask=local_mask))
-
-        for epoch in range(cfg.epochs):
-            contacts = next_contacts()
-            rng, kb, kr = jax.random.split(rng, 3)
-            batch = pipeline.sample_batches(fed_data, kb, cfg.local_steps, cfg.batch_size)
-            fed, diags = round_fn(fed, contacts, target, batch, kr)
-            if (epoch + 1) % cfg.eval_every == 0 or epoch == cfg.epochs - 1:
-                _record(result, epoch, fed.params, diags, eval_all, progress,
-                        num_vehicles=cfg.num_vehicles)
-
-    elif cfg.algorithm == "sp":
-        ps = baselines.init_push_sum(params_stack, total_nodes)
-
-        def grad_fn(params, batch, rng):
-            x, y = batch
-            loss, grads = jax.value_and_grad(loss_fn)(params, x, y, rng)
-            return grads, {"loss": loss}
-
-        round_fn = jax.jit(partial(baselines.sp_round, grad_fn=grad_fn, lr=cfg.lr))
-        # SP uses the full local dataset per iteration (paper Sec. VI-A.5);
-        # cap the materialized batch at 512 resampled-from-own-partition
-        # samples — an unbiased full-batch estimate that keeps single-core
-        # benchmark runs tractable.
-        full_bs = min(int(dense.shape[1]), 512)
-
-        for epoch in range(cfg.epochs):
-            contacts = next_contacts()
-            rng, kb, kr = jax.random.split(rng, 3)
-            batch = pipeline.sample_full_batches(fed_data, kb, full_bs)
-            ps, diags = round_fn(ps, contacts, target, batch, kr)
-            if (epoch + 1) % cfg.eval_every == 0 or epoch == cfg.epochs - 1:
-                _record(result, epoch, baselines.sp_model(ps), diags, eval_all,
-                        progress, num_vehicles=cfg.num_vehicles)
-    else:
-        raise ValueError(cfg.algorithm)
+    for epoch in range(cfg.epochs):
+        contacts = jnp.asarray(ctx.contacts.window(1)[0])
+        rng, kb, kr = jax.random.split(rng, 3)
+        batch = ctx.sample_fn(ctx.fed_data, kb)
+        state, diags = round_fn(state, contacts, ctx.target, batch, kr,
+                                ctx.fed_data)
+        if (epoch + 1) % cfg.eval_every == 0 or epoch == cfg.epochs - 1:
+            _record(result, epoch, ctx.model_of(state), diags, eval_all,
+                    progress, num_vehicles=cfg.num_vehicles)
 
     result.wall_time = time.time() - t0
     return result

@@ -143,7 +143,17 @@ def make_road_network(name: str, seed: int = 0) -> RoadNetwork:
 
 def contact_matrix(positions: np.ndarray, comm_range: float = 100.0) -> np.ndarray:
     """[K, K] 0/1 contact graph: pairs within ``comm_range`` meters; diag = 1."""
-    d = np.linalg.norm(positions[:, None, :] - positions[None, :, :], axis=-1)
+    return contact_matrices(positions[None], comm_range)[0]
+
+
+def contact_matrices(positions: np.ndarray, comm_range: float = 100.0) -> np.ndarray:
+    """Batched ``contact_matrix``: [T, K, 2] positions -> [T, K, K] contacts.
+
+    One vectorized distance computation for a whole epoch window — the
+    host-side half of the fused engine's contact-window precompute.
+    """
+    d = np.linalg.norm(positions[:, :, None, :] - positions[:, None, :, :], axis=-1)
     c = (d <= comm_range).astype(np.float32)
-    np.fill_diagonal(c, 1.0)
+    k = c.shape[-1]
+    c[:, np.arange(k), np.arange(k)] = 1.0
     return c

@@ -1,0 +1,120 @@
+"""Fused scan engine: parity vs the legacy per-epoch loop, window chunking,
+contact-window batching, seed vmap, and the sweep runner."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import synthetic_mnist
+from repro.fed import engine
+from repro.fed.simulator import SimulationConfig, run_simulation
+from repro.fed.topology import make_road_network
+from repro.launch import sweep as sweep_lib
+
+
+@pytest.fixture(scope="module")
+def tiny_ds():
+    return synthetic_mnist(n_train=1500, n_test=300)
+
+
+def _tiny_cfg(**kw):
+    base = dict(algorithm="dds", num_vehicles=6, epochs=6, eval_every=3,
+                eval_samples=300, local_steps=2, batch_size=16, p1_steps=30,
+                lr=0.15, seed=0)
+    base.update(kw)
+    return SimulationConfig(**base)
+
+
+@pytest.mark.parametrize("algorithm", ["dds", "dfl", "sp"])
+def test_engine_matches_legacy_loop(tiny_ds, algorithm):
+    """Acceptance: same config/seed -> identical eval trajectories (1e-5)."""
+    cfg = _tiny_cfg(algorithm=algorithm)
+    legacy = run_simulation(replace(cfg, use_scan_engine=False), dataset=tiny_ds)
+    scan = run_simulation(cfg, dataset=tiny_ds)
+
+    assert scan.epochs_evaluated == legacy.epochs_evaluated
+    np.testing.assert_allclose(scan.avg_accuracy, legacy.avg_accuracy, atol=1e-5)
+    np.testing.assert_allclose(scan.vehicle_accuracy, legacy.vehicle_accuracy,
+                               atol=1e-5)
+    np.testing.assert_allclose(scan.entropy, legacy.entropy, atol=1e-5)
+    np.testing.assert_allclose(scan.kl_divergence, legacy.kl_divergence,
+                               atol=1e-5)
+    np.testing.assert_allclose(scan.consensus_distance,
+                               legacy.consensus_distance, rtol=1e-4, atol=1e-5)
+
+
+def test_engine_parity_with_rsus_and_drops(tiny_ds):
+    """The extension path (RSU relays + unreliable V2V) scans identically."""
+    cfg = _tiny_cfg(num_rsus=2, p_drop=0.25, epochs=5, eval_every=2)
+    legacy = run_simulation(replace(cfg, use_scan_engine=False), dataset=tiny_ds)
+    scan = run_simulation(cfg, dataset=tiny_ds)
+    assert scan.epochs_evaluated == legacy.epochs_evaluated
+    np.testing.assert_allclose(scan.avg_accuracy, legacy.avg_accuracy, atol=1e-5)
+    np.testing.assert_allclose(scan.entropy, legacy.entropy, atol=1e-5)
+    # vehicle-only reporting: RSUs excluded from accuracy rows
+    assert all(len(a) == cfg.num_vehicles for a in scan.vehicle_accuracy)
+    # but tracked in the diagnostics
+    assert all(len(e) == cfg.num_vehicles + cfg.num_rsus for e in scan.entropy)
+
+
+def test_window_chunking_is_invariant(tiny_ds):
+    """Chunked windows must replay the exact same trajectory as one scan."""
+    cfg = _tiny_cfg(epochs=7, eval_every=2)
+    full = run_simulation(cfg, dataset=tiny_ds)
+    chunked = run_simulation(replace(cfg, window_size=3), dataset=tiny_ds)
+    assert full.epochs_evaluated == chunked.epochs_evaluated
+    np.testing.assert_allclose(full.avg_accuracy, chunked.avg_accuracy, atol=1e-6)
+    np.testing.assert_allclose(full.entropy, chunked.entropy, atol=1e-6)
+
+
+def test_contact_stream_chunking_matches(tiny_ds):
+    """window(a); window(b) == window(a+b): RNG streams advance per epoch."""
+    cfg = _tiny_cfg(num_rsus=1, p_drop=0.3)
+    net = make_road_network(cfg.road_net, seed=cfg.seed)
+    whole = engine.ContactStream(cfg, net).window(6)
+    stream = engine.ContactStream(cfg, make_road_network(cfg.road_net, seed=cfg.seed))
+    chunks = np.concatenate([stream.window(2), stream.window(4)])
+    np.testing.assert_array_equal(whole, chunks)
+    # shape covers vehicles + RSUs, self-loops always on
+    k = cfg.num_vehicles + cfg.num_rsus
+    assert whole.shape == (6, k, k)
+    assert (whole[:, np.arange(k), np.arange(k)] == 1.0).all()
+
+
+def test_run_seeds_matches_solo_runs(tiny_ds):
+    """The vmapped seed axis reproduces per-seed solo engine runs."""
+    cfg = _tiny_cfg(epochs=4, eval_every=2)
+    batch = engine.run_seeds(cfg, seeds=(0, 1), dataset=tiny_ds)
+    for seed, res in zip((0, 1), batch):
+        solo = run_simulation(replace(cfg, seed=seed), dataset=tiny_ds)
+        assert res.epochs_evaluated == solo.epochs_evaluated
+        np.testing.assert_allclose(res.avg_accuracy, solo.avg_accuracy, atol=1e-5)
+        np.testing.assert_allclose(res.entropy, solo.entropy, atol=1e-5)
+
+
+def test_run_seeds_unbalanced_widths(tiny_ds):
+    """Unbalanced partitions give per-seed index tables of different widths;
+    stacking must pad them and still produce finite trajectories."""
+    cfg = _tiny_cfg(distribution="unbalanced_iid", epochs=3, eval_every=3)
+    results = engine.run_seeds(cfg, seeds=(0, 1, 2), dataset=tiny_ds)
+    assert len(results) == 3
+    for res in results:
+        assert res.epochs_evaluated == [3]
+        assert np.isfinite(res.final_accuracy())
+
+
+def test_sweep_runner_smoke(tiny_ds):
+    """A 2-scenario grid through run_sweep: results keyed and aggregated."""
+    base = _tiny_cfg(epochs=3, eval_every=3)
+    spec = sweep_lib.SweepSpec(road_nets=("grid",),
+                               distributions=("balanced_noniid",),
+                               algorithms=("dds", "dfl"), seeds=(0,), base=base)
+    results = sweep_lib.run_sweep(spec, dataset=tiny_ds)
+    assert [sr.key for sr in results] == [
+        ("grid", "balanced_noniid", "dds"), ("grid", "balanced_noniid", "dfl")]
+    for sr in results:
+        assert np.isfinite(sr.final_accuracies()).all()
+        epochs, curve = sr.mean_curve()
+        assert epochs == [3] and curve.shape == (1,)
+    rows = sweep_lib.summary_rows(results)
+    assert len(rows) == 3 and rows[0].startswith("road_net,")
