@@ -1,12 +1,19 @@
 """Kernel microbenchmarks (beyond-paper): us_per_call for the three Pallas
 kernels' jnp reference paths on CPU + interpret-mode validation overhead,
-plus the fused-engine vs legacy-loop epochs/sec comparison.
+plus the fused-engine vs legacy-loop epochs/sec comparison and the
+vmap-vs-shard_map backend comparison (which also writes the machine-readable
+``BENCH_engine.json`` so the perf trajectory is tracked per PR).
 
 On-TPU numbers come from the same harness with interpret=False on a real
 device; here the CSV records the CPU reference timing and derived bandwidth.
 """
 from __future__ import annotations
 
+import json
+import os
+import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -63,6 +70,52 @@ def main() -> list[str]:
     rows.append(csv_row("attention_ref_1k_8h", f"{us:.1f}",
                         f"{flops / (us / 1e6) / 1e9:.1f}GFLOPs_eff"))
     rows.extend(engine_vs_loop_rows())
+    rows.extend(engine_backend_rows())
+    return rows
+
+
+def engine_backend_rows(out_path: str = "BENCH_engine.json",
+                        forced_devices: int = 4) -> list[str]:
+    """vmap vs shard_map epochs/sec at K in {8, 64} (benchmarks
+    .engine_backends), run in a CHILD process so the host-device count can
+    be forced after this process already initialized jax single-device.
+    Writes ``BENCH_engine.json`` at the repo root (where the tracked copy
+    lives, regardless of the invoking CWD) and returns CSV rows.
+    """
+    repo_root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                          f" --xla_force_host_platform_device_count={forced_devices}").strip())
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = f"{repo_root / 'src'}{os.pathsep}" + env.get("PYTHONPATH", "")
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.engine_backends"],
+            env=env, capture_output=True, text=True, timeout=1800,
+            cwd=repo_root)
+    except subprocess.TimeoutExpired:
+        return [csv_row("engine_backends", "FAILED", "timeout_1800s")]
+    if proc.returncode != 0:
+        err = (proc.stderr.strip().splitlines() or ["?"])[-1]
+        return [csv_row("engine_backends", "FAILED", err[:120])]
+    report = json.loads(proc.stdout.strip().splitlines()[-1])
+    out_file = repo_root / out_path
+    out_file.write_text(json.dumps(report, indent=2) + "\n")
+
+    rows = []
+    for r in report["results"]:
+        k = r["num_vehicles"]
+        rows.append(csv_row(
+            f"engine_vmap_dds_{k}v", f"{1e6 / r['vmap_epochs_per_s']:.1f}",
+            f"{r['vmap_epochs_per_s']:.2f}epochs_per_s"))
+        rows.append(csv_row(
+            f"engine_shard_map_dds_{k}v_{r['vehicle_shards']}shards",
+            f"{1e6 / r['shard_map_epochs_per_s']:.1f}",
+            f"{r['shard_map_epochs_per_s']:.2f}epochs_per_s"))
+        rows.append(csv_row(f"engine_shard_vs_vmap_{k}v",
+                            f"{r['shard_vs_vmap']:.2f}x",
+                            f"{report['device_count']}dev"))
+    rows.append(csv_row("engine_backends_json", str(out_file), "machine_readable"))
     return rows
 
 

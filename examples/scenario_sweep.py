@@ -2,8 +2,11 @@
 
 The sweep runner maps the fused scan engine over scenario axes (here
 road_net x algorithm) and vmaps it over seeds inside each scenario — three
-seeds of DDS advance through one jitted scan, not three serial runs. Scale
-the same script up (vehicles/epochs/seeds, + 'sp', + 'random', cifar10) to
+seeds of DDS advance through one jitted scan, not three serial runs. Every
+axis value is registry-resolved, so the beyond-paper 'highway' corridor net
+and the 'd_fedavg'/'d_sgd' baselines are sweepable by name exactly like the
+paper's scenarios. Scale the same script up (vehicles/epochs/seeds, + 'sp',
++ 'random', cifar10, backend='shard_map' on multi-device hosts) to
 reproduce the paper's full figure grids; see also: python -m
 repro.launch.sweep --help.
 
@@ -30,8 +33,8 @@ base = SimulationConfig(
 )
 
 spec = SweepSpec(
-    road_nets=("grid", "spider"),
-    algorithms=("dds", "dfl"),
+    road_nets=("grid", "highway"),     # 'highway' is a beyond-paper registry entry
+    algorithms=("dds", "d_fedavg"),    # so is train-then-aggregate 'd_fedavg'
     seeds=(0, 1, 2),
     base=base,
 )

@@ -1,8 +1,16 @@
-"""Baselines the paper compares against.
+"""Baselines the paper compares against, plus two beyond-paper references.
 
 * ``dfl_round`` — decentralized FedAvg [6]: aggregation weights proportional
   to neighbour sample counts; E local iterations per global epoch (same loop
   structure as DFL-DDS, different mixing matrix).
+* ``d_sgd_round`` — decentralized gossip SGD (D-PSGD-style): the same
+  mix-then-train loop with Metropolis-Hastings weights
+  (``aggregation.metropolis_mixing``) — symmetric, doubly stochastic on the
+  contact graph, the classic consensus-optimization reference point.
+* ``d_fedavg_round`` — train-then-aggregate decentralized FedAvg: each
+  vehicle finishes its E local iterations FIRST and the sample-size-weighted
+  gossip average follows (the DFedAvg ordering), vs ``dfl_round``'s
+  aggregate-then-train.
 * ``sp_round`` — subgradient-push (SP) [5], per the paper's implementation
   description (Sec. IV-B): each vehicle keeps (x_k, y_k), broadcasts
   x_k/p_k and y_k/p_k to every member of P_{k,t}, performs ONE local
@@ -11,6 +19,11 @@
 State vectors are also tracked for the baselines (they do not influence the
 baselines' aggregation — they are needed to reproduce the paper's diversity
 measurements, Figs. 2-3).
+
+Every round takes a ``shard`` (core.vehicle_axis.VehicleSharding): the big
+[K, ...] stacks (params, optimizer state, batches) carry only this shard's
+rows while the small [K, K] matrices stay replicated, so the same round body
+runs under the single-device vmap backend and the shard_map backend.
 """
 from __future__ import annotations
 
@@ -20,10 +33,57 @@ import jax
 import jax.numpy as jnp
 
 from . import aggregation, state_vector
-from .dfl_dds import FederationState, LocalTrainFn
+from .dfl_dds import FederationState, LocalTrainFn, masked_update
+from .vehicle_axis import GLOBAL, VehicleSharding
 
 Array = jax.Array
 PyTree = Any
+
+
+def gossip_round(
+    fed: FederationState,
+    mixing: Array,
+    target: Array,
+    batches: PyTree,
+    rng: Array,
+    local_train_fn: LocalTrainFn,
+    *,
+    lr: float | Array,
+    local_steps: int,
+    mix_params_fn: Callable[[Array, PyTree], PyTree] = aggregation.mix_params,
+    local_mask: Array | None = None,
+    shard: VehicleSharding = GLOBAL,
+) -> tuple[FederationState, dict[str, Array]]:
+    """The shared mix-then-train gossip iteration, parametrized by a
+    precomputed row-stochastic ``mixing`` [K, K]: aggregate models, run E
+    local iterations per vehicle, mix + bump state vectors.
+
+    ``local_mask`` [K]: participants that run local iterations (RSUs carry 0).
+    """
+    k = fed.state_matrix.shape[0]
+
+    params = mix_params_fn(mixing, fed.params)
+    rngs = shard.local_rows(jax.random.split(rng, k))
+    new_params, opt_state, metrics = jax.vmap(local_train_fn)(
+        params, fed.opt_state, batches, rngs)
+    if local_mask is not None:
+        row_mask = shard.local_rows(local_mask)
+        params = masked_update(new_params, params, row_mask)
+        opt_state = masked_update(opt_state, fed.opt_state, row_mask)
+    else:
+        params = new_params
+
+    state = state_vector.aggregate(fed.state_matrix, mixing)
+    state = state_vector.local_update(state, lr, local_steps, update_mask=local_mask)
+
+    out = FederationState(params, opt_state, state, fed.epoch + 1)
+    diags = {
+        "kl_divergence": state_vector.kl_to_target(state, target),
+        "entropy": state_vector.entropy(state),
+        "mixing": mixing,
+        **metrics,
+    }
+    return out, diags
 
 
 def dfl_round(
@@ -39,30 +99,77 @@ def dfl_round(
     local_steps: int,
     mix_params_fn: Callable[[Array, PyTree], PyTree] = aggregation.mix_params,
     local_mask: Array | None = None,
+    shard: VehicleSharding = GLOBAL,
 ) -> tuple[FederationState, dict[str, Array]]:
-    """Decentralized FedAvg: alpha proportional to sample population [6].
+    """Decentralized FedAvg: alpha proportional to sample population [6]."""
+    mixing = aggregation.sample_size_mixing(contact_matrix, sample_counts)
+    return gossip_round(fed, mixing, target, batches, rng, local_train_fn,
+                        lr=lr, local_steps=local_steps,
+                        mix_params_fn=mix_params_fn, local_mask=local_mask,
+                        shard=shard)
 
-    ``local_mask`` [K]: participants that run local iterations (RSUs carry 0).
+
+def d_sgd_round(
+    fed: FederationState,
+    contact_matrix: Array,
+    target: Array,
+    batches: PyTree,
+    rng: Array,
+    local_train_fn: LocalTrainFn,
+    *,
+    lr: float | Array,
+    local_steps: int,
+    mix_params_fn: Callable[[Array, PyTree], PyTree] = aggregation.mix_params,
+    local_mask: Array | None = None,
+    shard: VehicleSharding = GLOBAL,
+) -> tuple[FederationState, dict[str, Array]]:
+    """Decentralized gossip SGD: Metropolis-Hastings consensus weights —
+    symmetric and doubly stochastic on the undirected contact graph."""
+    mixing = aggregation.metropolis_mixing(contact_matrix)
+    return gossip_round(fed, mixing, target, batches, rng, local_train_fn,
+                        lr=lr, local_steps=local_steps,
+                        mix_params_fn=mix_params_fn, local_mask=local_mask,
+                        shard=shard)
+
+
+def d_fedavg_round(
+    fed: FederationState,
+    contact_matrix: Array,
+    target: Array,
+    batches: PyTree,
+    rng: Array,
+    local_train_fn: LocalTrainFn,
+    *,
+    sample_counts: Array,
+    lr: float | Array,
+    local_steps: int,
+    mix_params_fn: Callable[[Array, PyTree], PyTree] = aggregation.mix_params,
+    local_mask: Array | None = None,
+    shard: VehicleSharding = GLOBAL,
+) -> tuple[FederationState, dict[str, Array]]:
+    """Train-then-aggregate decentralized FedAvg: E local iterations first,
+    then the sample-size-weighted gossip average — the DFedAvg ordering.
+
+    The state vectors mirror the model order: the local bump (Eq. 5) lands
+    before the aggregation (Eq. 7), since each vehicle's own contribution is
+    made before its neighbours average it in.
     """
     k = fed.state_matrix.shape[0]
-    mixing = aggregation.sample_size_mixing(contact_matrix, sample_counts)
 
-    params = mix_params_fn(mixing, fed.params)
-    rngs = jax.random.split(rng, k)
+    rngs = shard.local_rows(jax.random.split(rng, k))
     new_params, opt_state, metrics = jax.vmap(local_train_fn)(
-        params, fed.opt_state, batches, rngs)
+        fed.params, fed.opt_state, batches, rngs)
     if local_mask is not None:
-        keep = lambda new, old: jax.tree_util.tree_map(
-            lambda n, o: jnp.where(
-                local_mask.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o),
-            new, old)
-        params = keep(new_params, params)
-        opt_state = keep(opt_state, fed.opt_state)
-    else:
-        params = new_params
+        row_mask = shard.local_rows(local_mask)
+        new_params = masked_update(new_params, fed.params, row_mask)
+        opt_state = masked_update(opt_state, fed.opt_state, row_mask)
 
-    state = state_vector.aggregate(fed.state_matrix, mixing)
-    state = state_vector.local_update(state, lr, local_steps, update_mask=local_mask)
+    mixing = aggregation.sample_size_mixing(contact_matrix, sample_counts)
+    params = mix_params_fn(mixing, new_params)
+
+    state = state_vector.local_update(fed.state_matrix, lr, local_steps,
+                                      update_mask=local_mask)
+    state = state_vector.aggregate(state, mixing)
 
     out = FederationState(params, opt_state, state, fed.epoch + 1)
     diags = {
@@ -112,11 +219,16 @@ def sp_round(
     *,
     lr: float | Array,
     mix_params_fn: Callable[[Array, PyTree], PyTree] = aggregation.mix_params,
+    shard: VehicleSharding = GLOBAL,
 ) -> tuple[PushSumState, dict[str, Array]]:
     """One subgradient-push global iteration.
 
     ``grad_fn(params_k, batch_k, rng_k) -> (grads_k, metrics_k)`` computes the
     full-batch subgradient at the de-biased model z = x/y for ONE vehicle.
+
+    Under a sharded vehicle axis, ``x`` carries this shard's rows; the tiny
+    push-sum weight vector ``y`` [K] stays replicated (its mix is a [K, K] @
+    [K] matvec every shard repeats).
     """
     k = ps.y.shape[0]
     mixing = push_sum_mixing(contact_matrix)
@@ -126,8 +238,10 @@ def sp_round(
     y = mixing @ ps.y
 
     # de-biased model and one subgradient step on x
-    z = jax.tree_util.tree_map(lambda leaf: leaf / y.reshape((-1,) + (1,) * (leaf.ndim - 1)), x)
-    rngs = jax.random.split(rng, k)
+    y_rows = shard.local_rows(y)
+    z = jax.tree_util.tree_map(
+        lambda leaf: leaf / y_rows.reshape((-1,) + (1,) * (leaf.ndim - 1)), x)
+    rngs = shard.local_rows(jax.random.split(rng, k))
     grads, metrics = jax.vmap(grad_fn)(z, full_batches, rngs)
     lr_ = jnp.asarray(lr, jnp.float32)
     x = jax.tree_util.tree_map(lambda xl, gl: xl - lr_ * gl.astype(xl.dtype), x, grads)
@@ -146,8 +260,10 @@ def sp_round(
     return out, diags
 
 
-def sp_model(ps: PushSumState) -> PyTree:
-    """The models SP evaluates: z_k = x_k / y_k."""
+def sp_model(ps: PushSumState, shard: VehicleSharding = GLOBAL) -> PyTree:
+    """The models SP evaluates: z_k = x_k / y_k (rows of y matching the
+    shard's rows of x)."""
+    y = shard.local_rows(ps.y)
     return jax.tree_util.tree_map(
-        lambda leaf: leaf / ps.y.reshape((-1,) + (1,) * (leaf.ndim - 1)), ps.x
+        lambda leaf: leaf / y.reshape((-1,) + (1,) * (leaf.ndim - 1)), ps.x
     )

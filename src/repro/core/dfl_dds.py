@@ -21,10 +21,20 @@ import jax
 import jax.numpy as jnp
 
 from . import aggregation, kl_solver, state_vector
+from .vehicle_axis import GLOBAL, VehicleSharding
 
 Array = jax.Array
 PyTree = Any
 LocalTrainFn = Callable[[PyTree, PyTree, PyTree, Array], tuple[PyTree, PyTree, PyTree]]
+
+
+def masked_update(new: PyTree, old: PyTree, mask: Array) -> PyTree:
+    """Keep ``new`` where ``mask`` (a [K] row mask, broadcast over trailing
+    dims) is positive, ``old`` elsewhere — how RSU rows skip local training."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(
+            mask.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o),
+        new, old)
 
 
 class FederationState(NamedTuple):
@@ -57,11 +67,19 @@ def dds_round(
     p1_step_size: float = 0.5,
     mix_params_fn: Callable[[Array, PyTree], PyTree] = aggregation.mix_params,
     local_mask: Array | None = None,
+    shard: VehicleSharding = GLOBAL,
 ) -> tuple[FederationState, dict[str, Array]]:
     """One DFL-DDS global iteration for the whole federation.
 
     ``local_mask`` [K] marks participants that run local iterations; RSUs
     (paper Sec. V-C — static, data-less relays) carry 0 and only mix.
+
+    ``shard`` selects the vehicle-axis regime (core.vehicle_axis): params /
+    opt_state / batches carry this shard's rows while the [K, K] state and
+    mixing matrices stay replicated, so the same round body serves both the
+    single-device vmap backend and the shard_map backend. RNGs are always
+    split at global K and then row-sliced — the per-vehicle streams are
+    identical in both regimes.
     """
     k = fed.state_matrix.shape[0]
 
@@ -76,16 +94,13 @@ def dds_round(
     params = mix_params_fn(mixing, fed.params)
 
     # -- step 4: E local iterations per vehicle -----------------------------
-    rngs = jax.random.split(rng, k)
+    rngs = shard.local_rows(jax.random.split(rng, k))
     new_params, opt_state, metrics = jax.vmap(local_train_fn)(
         params, fed.opt_state, batches, rngs)
     if local_mask is not None:
-        keep = lambda new, old: jax.tree_util.tree_map(
-            lambda n, o: jnp.where(
-                local_mask.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o),
-            new, old)
-        params = keep(new_params, params)
-        opt_state = keep(opt_state, fed.opt_state)
+        row_mask = shard.local_rows(local_mask)
+        params = masked_update(new_params, params, row_mask)
+        opt_state = masked_update(opt_state, fed.opt_state, row_mask)
     else:
         params = new_params
 

@@ -1,0 +1,123 @@
+"""The vehicle axis as a *partitionable* dimension.
+
+Every federation quantity in this repo is stacked on a leading vehicle axis
+K: model parameters ``[K, ...]``, optimizer state, per-vehicle RNGs, batches.
+The fused engine runs that axis in one of two regimes:
+
+* **global** — the whole stack lives on one device (the vmap backend);
+* **sharded** — the stack is split into ``num_shards`` contiguous row blocks
+  over a named mesh axis via ``shard_map`` (the shard_map backend), with the
+  small ``[K, K]`` state/contact/mixing matrices replicated on every shard.
+
+``VehicleSharding`` captures that choice so the algorithm rounds
+(``core.dfl_dds``, ``core.baselines``) are written ONCE and run in both
+regimes: the round always *splits* RNGs / masks at global K (keeping the
+random streams bitwise identical across backends) and then takes
+``local_rows`` — the identity in the global regime, this shard's row block
+under ``shard_map``.
+
+The one cross-vehicle coupling, the gossip contraction ``W @ w`` (Eq. 10),
+becomes a sharded matmul via ``sharded_mix``: each shard multiplies the
+*column block* of W it owns rows of ``w`` for against its local rows — a
+partial sum over its vehicles — and a tiled ``psum_scatter`` over the mesh
+axis both completes the sum and deals each shard its own output rows. No
+shard ever materializes the full ``[K, P]`` model stack.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class VehicleSharding:
+    """How the leading vehicle axis is partitioned at trace time.
+
+    ``axis_name`` is the mesh axis the rows are sharded over (None = the
+    global single-shard regime); ``num_shards`` its size. Row blocks are
+    contiguous and in mesh-axis order: shard i owns rows
+    ``[i * K/num_shards, (i+1) * K/num_shards)``.
+    """
+    axis_name: str | None = None
+    num_shards: int = 1
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.axis_name is not None and self.num_shards > 1
+
+    def local_rows(self, x: Array | None) -> Array | None:
+        """Slice a [K, ...] array (built at global K) to this shard's rows."""
+        if x is None or not self.is_sharded:
+            return x
+        k_local = x.shape[0] // self.num_shards
+        start = jax.lax.axis_index(self.axis_name) * k_local
+        return jax.lax.dynamic_slice_in_dim(x, start, k_local, axis=0)
+
+    def local_cols(self, w: Array) -> Array:
+        """Slice a [K, K] matrix to the columns matching this shard's rows."""
+        if not self.is_sharded:
+            return w
+        k_local = w.shape[-1] // self.num_shards
+        start = jax.lax.axis_index(self.axis_name) * k_local
+        return jax.lax.dynamic_slice_in_dim(w, start, k_local, axis=-1)
+
+    def pmean(self, x: Array) -> Array:
+        """Mean of a per-shard scalar/array over the vehicle mesh axis.
+
+        Shards hold equal row counts, so the pmean of per-shard means equals
+        the global mean. Identity in the single-shard regimes.
+        """
+        if not self.is_sharded:
+            return x
+        return jax.lax.pmean(x, self.axis_name)
+
+    def psum(self, x: Array) -> Array:
+        if not self.is_sharded:
+            return x
+        return jax.lax.psum(x, self.axis_name)
+
+
+GLOBAL = VehicleSharding()
+
+
+MixParamsFn = Callable[[Array, PyTree], PyTree]
+
+
+def sharded_mix(base_mix_fn: MixParamsFn, shard: VehicleSharding) -> MixParamsFn:
+    """Lift a global gossip-mix ``(W [K, K], pytree [K, ...]) -> [K, ...]``
+    into the sharded regime: partial matmul over local vehicles + tiled
+    psum_scatter over the vehicle axis (out[k] = sum_j W[k, j] x[j] with the
+    j-sum distributed over shards and the k-rows dealt back out).
+
+    ``base_mix_fn`` must accept a rectangular [K, K_local] mixing block —
+    both ``aggregation.mix_params`` (tensordot) and the Pallas
+    ``mix_params_pallas`` do. In the global regime the base fn is returned
+    untouched, so the vmap backend's numerics are bit-identical to before.
+    """
+    if not shard.is_sharded:
+        return base_mix_fn
+
+    def mix(mixing: Array, params: PyTree) -> PyTree:
+        cols = shard.local_cols(mixing)          # [K, K_local]
+        partial = base_mix_fn(cols, params)      # [K, ...] partial sums
+        return jax.tree_util.tree_map(
+            lambda t: jax.lax.psum_scatter(
+                t, shard.axis_name, scatter_dimension=0, tiled=True),
+            partial)
+
+    return mix
+
+
+def local_nodes(total_nodes: int, shard: VehicleSharding) -> int:
+    """Rows of the vehicle axis this shard owns (static)."""
+    if total_nodes % shard.num_shards:
+        raise ValueError(
+            f"total_nodes={total_nodes} not divisible by "
+            f"num_shards={shard.num_shards}")
+    return total_nodes // shard.num_shards

@@ -37,9 +37,26 @@ def make_federated_data(train_x: np.ndarray, train_y: np.ndarray,
 @partial(jax.jit, static_argnames=("local_steps", "batch_size"))
 def sample_batches(data: FederatedData, rng: Array, local_steps: int, batch_size: int):
     """Draw per-vehicle minibatches: returns (x, y) of shape [K, E, B, ...]."""
+    return sample_batches_sliced(data, rng, local_steps, batch_size)
+
+
+def sample_batches_sliced(data: FederatedData, rng: Array, local_steps: int,
+                          batch_size: int, take_rows=None):
+    """``sample_batches`` with an optional vehicle-row slice.
+
+    ``take_rows`` maps a [K, ...] array to the caller's rows — identity (None)
+    on the single-device path, a shard-local row slice under the shard_map
+    backend. The FULL [K, E, B] pick tensor is always drawn before slicing,
+    so every backend consumes the identical random stream and per-vehicle
+    batches match across them; only the gather is per-shard.
+    """
     k, w = data.index_table.shape
     picks = jax.random.randint(rng, (k, local_steps, batch_size), 0, w)
-    idx = data.index_table[jnp.arange(k)[:, None, None], picks]  # [K, E, B]
+    table = data.index_table
+    if take_rows is not None:
+        picks, table = take_rows(picks), take_rows(table)
+    rows = jnp.arange(table.shape[0])
+    idx = table[rows[:, None, None], picks]  # [K_rows, E, B]
     return data.x[idx], data.y[idx]
 
 
@@ -87,7 +104,18 @@ def sample_full_batches(data: FederatedData, rng: Array, batch_size: int):
     partition — used by SP's single full-set local iteration (the paper's SP
     uses all local samples; we draw ``batch_size`` >= typical partition size,
     with self-resampling padding preserving the distribution)."""
+    return sample_full_batches_sliced(data, rng, batch_size)
+
+
+def sample_full_batches_sliced(data: FederatedData, rng: Array,
+                               batch_size: int, take_rows=None):
+    """``sample_full_batches`` with an optional vehicle-row slice (see
+    ``sample_batches_sliced`` — full pick tensor first, slice after, so the
+    random stream is backend-invariant)."""
     k, w = data.index_table.shape
     picks = jax.random.randint(rng, (k, batch_size), 0, w)
-    idx = jnp.take_along_axis(data.index_table, picks, axis=-1)
+    table = data.index_table
+    if take_rows is not None:
+        picks, table = take_rows(picks), take_rows(table)
+    idx = jnp.take_along_axis(table, picks, axis=-1)
     return data.x[idx], data.y[idx]

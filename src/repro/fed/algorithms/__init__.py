@@ -1,0 +1,18 @@
+"""Registered federation algorithms (see base.Algorithm for the protocol).
+
+Importing this package registers the built-ins: the paper's three
+(``dds`` / ``dfl`` / ``sp``) and the beyond-paper baselines
+(``d_fedavg`` / ``d_sgd``). The engine and the sweep runner resolve
+``SimulationConfig.algorithm`` through ``get_algorithm`` — adding an
+algorithm here (or anywhere that runs ``register_algorithm``) requires no
+engine edits.
+"""
+from .base import (  # noqa: F401
+    Algorithm,
+    AlgorithmSetup,
+    available_algorithms,
+    federation_state_pspec,
+    get_algorithm,
+    register_algorithm,
+)
+from . import d_fedavg, d_sgd, dds, dfl, sp  # noqa: F401  (registration)

@@ -1,0 +1,35 @@
+"""d_fedavg: train-then-aggregate decentralized FedAvg (beyond-paper
+baseline) as a registered Algorithm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import baselines, dfl_dds
+from .base import Algorithm, AlgorithmSetup, federation_state_pspec, register_algorithm
+
+
+@register_algorithm
+class DFedAvg(Algorithm):
+    """E local iterations FIRST, then the sample-size-weighted gossip
+    average (core.baselines.d_fedavg_round) — the DFedAvg ordering, vs
+    ``dfl``'s aggregate-then-train."""
+
+    name = "d_fedavg"
+
+    def init_state(self, setup: AlgorithmSetup):
+        return dfl_dds.init_federation(setup.params_stack, setup.opt_stack,
+                                       setup.total_nodes)
+
+    def round(self, setup, state, contacts_t, target, batch, rng, fed_data):
+        cfg = setup.cfg
+        return baselines.d_fedavg_round(
+            state, contacts_t, target, batch, rng, setup.local_train_fn,
+            sample_counts=fed_data.counts.astype(jnp.float32), lr=cfg.lr,
+            local_steps=cfg.local_steps, mix_params_fn=setup.mix_params_fn,
+            local_mask=setup.local_mask, shard=setup.shard)
+
+    def model_of(self, setup, state):
+        return state.params
+
+    def state_pspec(self, setup, axis_name):
+        return federation_state_pspec(setup, axis_name)

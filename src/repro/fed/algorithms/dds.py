@@ -1,0 +1,31 @@
+"""DFL-DDS (the paper's algorithm, Alg. 1) as a registered Algorithm."""
+from __future__ import annotations
+
+from ...core import dfl_dds
+from .base import Algorithm, AlgorithmSetup, federation_state_pspec, register_algorithm
+
+
+@register_algorithm
+class DDS(Algorithm):
+    """State-vector-guided aggregation: per-round P1 solve -> gossip mix ->
+    E local iterations -> state-vector update (core.dfl_dds.dds_round)."""
+
+    name = "dds"
+
+    def init_state(self, setup: AlgorithmSetup):
+        return dfl_dds.init_federation(setup.params_stack, setup.opt_stack,
+                                       setup.total_nodes)
+
+    def round(self, setup, state, contacts_t, target, batch, rng, fed_data):
+        cfg = setup.cfg
+        return dfl_dds.dds_round(
+            state, contacts_t, target, batch, rng, setup.local_train_fn,
+            lr=cfg.lr, local_steps=cfg.local_steps, p1_steps=cfg.p1_steps,
+            p1_step_size=cfg.p1_step_size, mix_params_fn=setup.mix_params_fn,
+            local_mask=setup.local_mask, shard=setup.shard)
+
+    def model_of(self, setup, state):
+        return state.params
+
+    def state_pspec(self, setup, axis_name):
+        return federation_state_pspec(setup, axis_name)

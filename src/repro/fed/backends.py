@@ -1,0 +1,210 @@
+"""Execution backends for the fused engine, behind a string-keyed registry.
+
+A backend decides *where the stacked vehicle axis lives* while the scanned
+window runs; the algorithm rounds (fed.algorithms -> core rounds) are
+backend-agnostic:
+
+* ``vmap`` — the whole federation on one device; ``run_seeds`` vmaps S
+  federations over a seed axis (the PR-1 engine behaviour, unchanged).
+* ``shard_map`` — the vehicle axis sharded over the federation mesh's
+  ``vehicle`` axis (launch.mesh.make_federation_mesh): params / optimizer
+  state / batches are row blocks per device, the tiny [K, K] state /
+  contact / mixing matrices are replicated, and the gossip contraction
+  ``W @ w`` runs as a per-shard partial matmul + tiled psum_scatter
+  (core.vehicle_axis.sharded_mix). Per-shard matmuls go through the Pallas
+  ``gossip_mix`` kernel when ``cfg.mixing_backend == "pallas"``.
+
+Select with ``SimulationConfig.backend``; register new backends with
+``register_backend`` — ``run_with_context`` / ``run_seeds`` / ``run_sweep``
+pick them up by name with no engine edits.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.vehicle_axis import VehicleSharding
+from ..data import datasets as data_lib
+from ..data import pipeline
+from ..launch import mesh as mesh_lib
+from . import engine as engine_lib
+
+
+class Backend:
+    """Protocol: drive one federation (or a batch of seeds) through the
+    fused window scan."""
+
+    name: str = "?"
+
+    def run(self, ctx: "engine_lib.EngineContext", progress: bool = False):
+        raise NotImplementedError
+
+    def run_seeds(self, cfg, seeds, dataset=None, progress: bool = False):
+        raise NotImplementedError
+
+
+_BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(cls: type[Backend]) -> type[Backend]:
+    _BACKENDS[cls.name] = cls()
+    return cls
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown execution backend {name!r} "
+            f"(registered: {'|'.join(available_backends())})") from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def _drive_windows(ctx, window_fn, progress: bool):
+    """The shared window-driving loop: advance the contact stream, scan each
+    window through ``window_fn`` (a jitted window callable), and collect the
+    masked trajectory rows. Both backends differ only in what ``window_fn``
+    is."""
+    cfg = ctx.cfg
+    t0 = time.time()
+    result = engine_lib.SimulationResult(config=cfg)
+    window_size = engine_lib._default_window(cfg, progress)
+    state, rng = ctx.init_state, ctx.init_rng
+    for start in range(0, cfg.epochs, window_size):
+        length = min(window_size, cfg.epochs - start)
+        contacts = jnp.asarray(ctx.contacts.window(length))
+        mask = engine_lib._eval_mask(cfg, start, length)
+        state, rng, traj = window_fn(
+            state, rng, ctx.fed_data, ctx.target, contacts, jnp.asarray(mask))
+        engine_lib._append_window(result, traj, mask, start, cfg.num_vehicles,
+                                  progress)
+    result.wall_time = time.time() - t0
+    return result
+
+
+@register_backend
+class VmapBackend(Backend):
+    """Single-device fused engine: one jitted scan per window, seeds vmapped."""
+
+    name = "vmap"
+
+    def run(self, ctx, progress: bool = False):
+        return _drive_windows(ctx, ctx.window_jit, progress)
+
+    def run_seeds(self, cfg, seeds, dataset=None, progress: bool = False):
+        """S independent federations (seeded partitions, mobility traces and
+        inits) through ONE vmapped scan — the engine's seed axis. Per-seed
+        index tables are padded to a common width so they stack."""
+        seeds = list(seeds)
+        ds = dataset or data_lib.load_dataset(cfg.dataset, seed=cfg.seed)
+        ctxs = [engine_lib.build_context(replace(cfg, seed=int(s)), dataset=ds)
+                for s in seeds]
+
+        fed_stack = pipeline.stack_federated_data([c.fed_data for c in ctxs],
+                                                  seed=cfg.seed)
+        states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                        *[c.init_state for c in ctxs])
+        rngs = jnp.stack([c.init_rng for c in ctxs])
+        targets = jnp.stack([c.target for c in ctxs])
+
+        window_vmap = jax.jit(jax.vmap(
+            engine_lib.build_window_fn(ctxs[0]),
+            in_axes=(0, 0, pipeline.FederatedData(None, None, 0, 0), 0, 0, None)))
+
+        results = [engine_lib.SimulationResult(config=c.cfg) for c in ctxs]
+        window_size = engine_lib._default_window(cfg, progress)
+        for start in range(0, cfg.epochs, window_size):
+            length = min(window_size, cfg.epochs - start)
+            contacts = jnp.asarray(
+                np.stack([c.contacts.window(length) for c in ctxs]))
+            mask = engine_lib._eval_mask(cfg, start, length)
+            states, rngs, traj = window_vmap(states, rngs, fed_stack, targets,
+                                             contacts, jnp.asarray(mask))
+            traj = jax.tree_util.tree_map(np.asarray, traj)
+            for s_i, result in enumerate(results):
+                per_seed = jax.tree_util.tree_map(lambda x: x[s_i], traj)
+                engine_lib._append_window(result, per_seed, mask, start,
+                                          cfg.num_vehicles, progress)
+        return results
+
+
+def vehicle_shards(total_nodes: int, max_shards: int | None = None) -> int:
+    """Largest device count that divides the vehicle axis evenly — the shard
+    count the shard_map backend will use (public: the engine benchmark and
+    tests report/assert on it)."""
+    limit = min(max_shards or jax.device_count(), jax.device_count(),
+                total_nodes)
+    return max(d for d in range(1, limit + 1) if total_nodes % d == 0)
+
+
+@register_backend
+class ShardMapBackend(Backend):
+    """Vehicle-sharded fused engine over the federation mesh.
+
+    The whole window scan runs inside one ``shard_map`` over
+    ``make_federation_mesh``'s ``vehicle`` axis (fsdp/model axes size 1 on
+    host devices; on TPU pods the same specs extend to per-vehicle FSDP —
+    the mesh is the contract). The vehicle count must divide over the
+    shards; the largest feasible device count is chosen automatically.
+    Inputs stay global ([K, ...]); shard_map deals rows per the specs and
+    reassembles global trajectories, so results are interchangeable with the
+    vmap backend's (parity-tested).
+    """
+
+    name = "shard_map"
+
+    def _sharded_window(self, ctx):
+        """Build (once per context — cached like ``ctx.window_jit``) the
+        jitted shard_map window for this run."""
+        if "shard_window" in ctx._jit_cache:
+            return ctx._jit_cache["shard_window"]
+        n = vehicle_shards(ctx.total_nodes)
+        mesh = mesh_lib.make_federation_mesh(
+            vehicle=n, fsdp=1, model=1,
+            devices=np.asarray(jax.devices()[:n]))
+        shard = VehicleSharding(axis_name="vehicle", num_shards=n)
+        sctx = ctx.bind(shard)
+
+        state_spec = ctx.algorithm.state_pspec(sctx.setup, "vehicle")
+        data_spec = pipeline.FederatedData(P(), P(), P(), P())
+        traj_spec = {
+            "accuracy": P(None, "vehicle"),   # [T, K] rows reassemble
+            "consensus": P(),
+            "entropy": P(),
+            "kl_divergence": P(),
+            "loss": P(),
+        }
+        window = shard_map(
+            engine_lib.build_window_fn(sctx), mesh=mesh,
+            in_specs=(state_spec, P(), data_spec, P(), P(), P()),
+            out_specs=(state_spec, P(), traj_spec),
+            check_rep=False)
+        ctx._jit_cache["shard_window"] = jax.jit(window)
+        return ctx._jit_cache["shard_window"]
+
+    def run(self, ctx, progress: bool = False):
+        return _drive_windows(ctx, self._sharded_window(ctx), progress)
+
+    def run_seeds(self, cfg, seeds, dataset=None, progress: bool = False):
+        """Seeds run serially, each vehicle-sharded over the whole mesh —
+        the devices go to the vehicle axis, not a seed axis. (Solo runs are
+        trajectory-identical to the vmap backend's seed rows, so mixing
+        backends across a sweep is sound.) The sharded window is compiled
+        once from the first context and reused — seed contexts differ only
+        in data, not in traced structure (jax retraces only if an unbalanced
+        partition changes the index-table width)."""
+        ds = dataset or data_lib.load_dataset(cfg.dataset, seed=cfg.seed)
+        ctxs = [engine_lib.build_context(replace(cfg, seed=int(s)), dataset=ds)
+                for s in seeds]
+        window_fn = self._sharded_window(ctxs[0])
+        return [_drive_windows(ctx, window_fn, progress) for ctx in ctxs]

@@ -34,7 +34,7 @@ identical eval trajectories).
 """
 from __future__ import annotations
 
-import time
+import warnings
 from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Any, Callable
@@ -43,11 +43,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import aggregation, baselines, dfl_dds, state_vector
+from ..core import aggregation, state_vector, vehicle_axis
 from ..data import datasets as data_lib
 from ..data import pipeline
+from ..kernels.gossip_mix import ops as gossip_ops
 from ..models import cnn as cnn_lib
 from ..optim import apply_updates, sgd
+from . import algorithms as algorithms_lib
 from . import extensions as extensions_lib
 from . import mobility as mobility_lib
 from . import partition as partition_lib
@@ -58,9 +60,9 @@ Array = jax.Array
 
 @dataclass
 class SimulationConfig:
-    algorithm: str = "dds"            # dds | dfl | sp
+    algorithm: str = "dds"            # any registered algorithm (fed.algorithms)
     dataset: str = "mnist"            # mnist | cifar10
-    road_net: str = "grid"            # grid | random | spider
+    road_net: str = "grid"            # any registered road network (fed.topology)
     distribution: str = "balanced_noniid"  # balanced_noniid | unbalanced_iid
     num_vehicles: int = 100
     epochs: int = 300
@@ -74,7 +76,14 @@ class SimulationConfig:
     p1_steps: int = 200
     p1_step_size: float = 2.0
     seed: int = 0
-    mix_params_fn: Callable = aggregation.mix_params
+    mobility: str = "manhattan"       # any registered mobility model (fed.mobility)
+    # how the gossip mix W @ w executes: "jnp" (tensordot reference, the CPU
+    # default) | "pallas" (the gossip_mix TPU kernel; jnp fallback off-TPU)
+    mixing_backend: str = "jnp"
+    # DEPRECATED: pass mixing_backend instead. A bare callable here broke
+    # dataclass equality/replace ergonomics; honored (with a warning) for one
+    # release.
+    mix_params_fn: Callable | None = None
     # extensions (paper Sec. V-C / Sec. VII): data-less static RSUs join the
     # federation as relays; V2V exchanges fail with probability p_drop
     num_rsus: int = 0
@@ -85,6 +94,27 @@ class SimulationConfig:
     # for the [T, K, K] contact tensor on very long runs).
     use_scan_engine: bool = True
     window_size: int = 0
+    # execution backend (fed.backends): "vmap" fuses the whole federation on
+    # one device; "shard_map" shards the stacked vehicle axis over the
+    # federation mesh's vehicle axis (launch.mesh.make_federation_mesh)
+    backend: str = "vmap"
+
+
+def resolve_mix_params_fn(cfg: SimulationConfig) -> Callable:
+    """The gossip-mix implementation for this run: the deprecated explicit
+    callable if set, else the ``mixing_backend`` string knob."""
+    if cfg.mix_params_fn is not None:
+        warnings.warn(
+            "SimulationConfig.mix_params_fn is deprecated; use "
+            "mixing_backend='jnp'|'pallas' (or register a backend) instead.",
+            DeprecationWarning, stacklevel=3)
+        return cfg.mix_params_fn
+    if cfg.mixing_backend == "jnp":
+        return aggregation.mix_params
+    if cfg.mixing_backend == "pallas":
+        return gossip_ops.mix_params_pallas
+    raise ValueError(
+        f"unknown mixing_backend {cfg.mixing_backend!r} (jnp|pallas)")
 
 
 @dataclass
@@ -146,9 +176,10 @@ class ContactStream:
 
     def __init__(self, cfg: SimulationConfig, net: topology_lib.RoadNetwork):
         self.cfg = cfg
-        self.mob = mobility_lib.ManhattanMobility(net, mobility_lib.MobilityConfig(
-            num_vehicles=cfg.num_vehicles, epoch_duration=cfg.epoch_duration,
-            comm_range=cfg.comm_range, seed=cfg.seed))
+        self.mob = mobility_lib.make_mobility(
+            cfg.mobility, net, mobility_lib.MobilityConfig(
+                num_vehicles=cfg.num_vehicles, epoch_duration=cfg.epoch_duration,
+                comm_range=cfg.comm_range, seed=cfg.seed))
         self.rsu_pos = (extensions_lib.place_rsus(net, cfg.num_rsus, seed=cfg.seed)
                         if cfg.num_rsus else None)
         self.drop_rng = np.random.default_rng(cfg.seed + 7)
@@ -168,7 +199,10 @@ class EngineContext:
     algorithm round (the extra ``fed_data`` arg lets DFL read per-seed sample
     counts under vmap); ``sample_fn(fed_data, key)`` draws the per-epoch
     device-side batch; ``model_of(state)`` extracts the evaluable parameter
-    stack (SP de-biases by the push-sum weights).
+    stack (SP de-biases by the push-sum weights). All three are the
+    registered algorithm's hooks bound to this run's ``setup``
+    (fed.algorithms); ``bind`` rebinds them to a sharded vehicle axis for
+    the shard_map backend.
     """
     cfg: SimulationConfig
     total_nodes: int
@@ -182,7 +216,27 @@ class EngineContext:
     sample_fn: Callable
     model_of: Callable
     eval_fn: Callable
+    algorithm: algorithms_lib.Algorithm
+    setup: algorithms_lib.AlgorithmSetup
     _jit_cache: dict = field(default_factory=dict, repr=False)
+
+    def bind(self, shard) -> "EngineContext":
+        """Rebind the algorithm hooks to a vehicle-axis sharding regime
+        (core.vehicle_axis.VehicleSharding): the gossip mix becomes the
+        sharded partial-matmul + psum_scatter contraction, and the hooks
+        slice per-vehicle rows to this shard. A fresh jit cache is attached
+        — the bound context traces different programs."""
+        setup = replace(
+            self.setup, shard=shard,
+            mix_params_fn=vehicle_axis.sharded_mix(self.setup.mix_params_fn,
+                                                   shard))
+        algo = self.algorithm
+        return replace(
+            self, setup=setup,
+            round_fn=partial(algo.round, setup),
+            sample_fn=partial(algo.sample, setup),
+            model_of=partial(algo.model_of, setup),
+            _jit_cache={})
 
     @property
     def window_jit(self):
@@ -205,7 +259,10 @@ class EngineContext:
 
 def build_context(cfg: SimulationConfig, dataset=None) -> EngineContext:
     """Shared setup for both the fused engine and the legacy loop: data
-    partition, mobility stream, model init, and the algorithm round."""
+    partition, mobility stream, model init — then the registered algorithm
+    (``fed.algorithms``) supplies state init, round, sampling, and model
+    extraction. No algorithm dispatch lives here: new algorithms register
+    themselves and are addressable by ``cfg.algorithm`` immediately."""
     ds = dataset or data_lib.load_dataset(cfg.dataset, seed=cfg.seed)
     init_fn, loss_fn, accuracy_fn = cnn_lib.make_cnn_task(ds.name)
 
@@ -241,60 +298,21 @@ def build_context(cfg: SimulationConfig, dataset=None) -> EngineContext:
     eval_y = jnp.asarray(ds.test_y[: cfg.eval_samples])
     eval_fn = jax.vmap(lambda p: accuracy_fn(p, eval_x, eval_y))
 
-    if cfg.algorithm in ("dds", "dfl"):
-        init_state = dfl_dds.init_federation(params_stack, opt_stack, total_nodes)
-        sample_fn = partial(pipeline.sample_batches, local_steps=cfg.local_steps,
-                            batch_size=cfg.batch_size)
-        model_of = lambda s: s.params  # noqa: E731
-
-        if cfg.algorithm == "dds":
-            base = partial(
-                dfl_dds.dds_round, local_train_fn=local_train_fn, lr=cfg.lr,
-                local_steps=cfg.local_steps, p1_steps=cfg.p1_steps,
-                p1_step_size=cfg.p1_step_size, mix_params_fn=cfg.mix_params_fn,
-                local_mask=local_mask)
-
-            def round_fn(state, contacts_t, tgt, batch, key, fd):
-                return base(state, contacts_t, tgt, batch, key)
-        else:
-            def round_fn(state, contacts_t, tgt, batch, key, fd):
-                return baselines.dfl_round(
-                    state, contacts_t, tgt, batch, key,
-                    local_train_fn=local_train_fn,
-                    sample_counts=fd.counts.astype(jnp.float32), lr=cfg.lr,
-                    local_steps=cfg.local_steps, mix_params_fn=cfg.mix_params_fn,
-                    local_mask=local_mask)
-
-    elif cfg.algorithm == "sp":
-        init_state = baselines.init_push_sum(params_stack, total_nodes)
-        model_of = baselines.sp_model
-
-        def grad_fn(params, batch, key):
-            x, y = batch
-            loss, grads = jax.value_and_grad(loss_fn)(params, x, y, key)
-            return grads, {"loss": loss}
-
-        # SP uses the full local dataset per iteration (paper Sec. VI-A.5);
-        # cap the materialized batch at 512 resampled-from-own-partition
-        # samples — an unbiased full-batch estimate that keeps single-core
-        # benchmark runs tractable. The cap reads the (static) index-table
-        # width at trace time so it also holds under the run_seeds vmap,
-        # where tables are padded to a common width.
-        def sample_fn(fd, key):
-            full_bs = min(int(fd.index_table.shape[-1]), 512)
-            return pipeline.sample_full_batches(fd, key, full_bs)
-
-        def round_fn(state, contacts_t, tgt, batch, key, fd):
-            return baselines.sp_round(state, contacts_t, tgt, batch, key,
-                                      grad_fn=grad_fn, lr=cfg.lr)
-    else:
-        raise ValueError(cfg.algorithm)
+    algo = algorithms_lib.get_algorithm(cfg.algorithm)
+    setup = algorithms_lib.AlgorithmSetup(
+        cfg=cfg, total_nodes=total_nodes, loss_fn=loss_fn,
+        local_train_fn=local_train_fn, params_stack=params_stack,
+        opt_stack=opt_stack, local_mask=local_mask,
+        mix_params_fn=resolve_mix_params_fn(cfg))
 
     return EngineContext(
         cfg=cfg, total_nodes=total_nodes, fed_data=fed_data, target=target,
-        local_mask=local_mask, contacts=contacts, init_state=init_state,
-        init_rng=rng, round_fn=round_fn, sample_fn=sample_fn,
-        model_of=model_of, eval_fn=eval_fn)
+        local_mask=local_mask, contacts=contacts,
+        init_state=algo.init_state(setup), init_rng=rng,
+        round_fn=partial(algo.round, setup),
+        sample_fn=partial(algo.sample, setup),
+        model_of=partial(algo.model_of, setup),
+        eval_fn=eval_fn, algorithm=algo, setup=setup)
 
 
 def build_window_fn(ctx: EngineContext) -> Callable:
@@ -307,16 +325,19 @@ def build_window_fn(ctx: EngineContext) -> Callable:
     """
     round_fn, sample_fn = ctx.round_fn, ctx.sample_fn
     model_of, eval_fn = ctx.model_of, ctx.eval_fn
-    total_nodes = ctx.total_nodes
+    shard = ctx.setup.shard
+    # rows this trace sees: the full stack, or this shard's block
+    local_nodes = vehicle_axis.local_nodes(ctx.total_nodes, shard)
 
     def window(state, rng, fed_data, target, contacts, eval_mask):
         def evaluate(st):
             model = model_of(st)
-            return (eval_fn(model),
-                    aggregation.consensus_distance(model).astype(jnp.float32))
+            consensus = aggregation.consensus_distance(
+                model, axis_name=shard.axis_name if shard.is_sharded else None)
+            return eval_fn(model), consensus.astype(jnp.float32)
 
         def skip(st):
-            return (jnp.full((total_nodes,), jnp.nan, jnp.float32),
+            return (jnp.full((local_nodes,), jnp.nan, jnp.float32),
                     jnp.float32(jnp.nan))
 
         def step(carry, inp):
@@ -331,7 +352,8 @@ def build_window_fn(ctx: EngineContext) -> Callable:
                 "consensus": consensus,
                 "entropy": diags["entropy"],
                 "kl_divergence": diags["kl_divergence"],
-                "loss": jnp.mean(diags["loss"]),
+                # per-shard mean of equal row counts -> pmean == global mean
+                "loss": shard.pmean(jnp.mean(diags["loss"])),
             }
             return (st, key), out
 
@@ -380,21 +402,11 @@ def _append_window(result: SimulationResult, traj, mask: np.ndarray, start: int,
 
 
 def run_with_context(ctx: EngineContext, progress: bool = False) -> SimulationResult:
-    """Drive one federation through the fused engine, window by window."""
-    cfg = ctx.cfg
-    t0 = time.time()
-    result = SimulationResult(config=cfg)
-    window_size = _default_window(cfg, progress)
-    state, rng = ctx.init_state, ctx.init_rng
-    for start in range(0, cfg.epochs, window_size):
-        length = min(window_size, cfg.epochs - start)
-        contacts = jnp.asarray(ctx.contacts.window(length))
-        mask = _eval_mask(cfg, start, length)
-        state, rng, traj = ctx.window_jit(
-            state, rng, ctx.fed_data, ctx.target, contacts, jnp.asarray(mask))
-        _append_window(result, traj, mask, start, cfg.num_vehicles, progress)
-    result.wall_time = time.time() - t0
-    return result
+    """Drive one federation through the fused engine on the execution
+    backend named by ``cfg.backend`` (fed.backends registry)."""
+    from . import backends as backends_lib
+
+    return backends_lib.get_backend(ctx.cfg.backend).run(ctx, progress=progress)
 
 
 def run(cfg: SimulationConfig, dataset=None, progress: bool = False) -> SimulationResult:
@@ -405,42 +417,19 @@ def run(cfg: SimulationConfig, dataset=None, progress: bool = False) -> Simulati
 def run_seeds(cfg: SimulationConfig, seeds, dataset=None,
               progress: bool = False) -> list[SimulationResult]:
     """Run S independent federations (seeded partitions, mobility traces and
-    inits) through ONE vmapped scan — the engine's seed axis.
+    inits) on the execution backend named by ``cfg.backend`` — one vmapped
+    scan over the seed axis on the vmap backend, vehicle-sharded runs on the
+    shard_map backend.
 
     The dataset is shared across seeds (loaded once from ``cfg`` when not
-    given); per-seed index tables are padded to a common width so they stack.
-    Returns one ``SimulationResult`` per seed, in ``seeds`` order.
+    given). Returns one ``SimulationResult`` per seed, in ``seeds`` order.
+    Batch wall time is the caller's to record (the sweep runner tracks it
+    per scenario): when the backend fuses all seeds into one dispatch
+    (vmap), per-seed ``wall_time`` stays 0 — no per-seed attribution exists;
+    when seeds run individually (shard_map), each result carries its own
+    genuine wall time.
     """
-    seeds = list(seeds)
-    t0 = time.time()
-    ds = dataset or data_lib.load_dataset(cfg.dataset, seed=cfg.seed)
-    ctxs = [build_context(replace(cfg, seed=int(s)), dataset=ds) for s in seeds]
+    from . import backends as backends_lib
 
-    fed_stack = pipeline.stack_federated_data([c.fed_data for c in ctxs],
-                                              seed=cfg.seed)
-    states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                    *[c.init_state for c in ctxs])
-    rngs = jnp.stack([c.init_rng for c in ctxs])
-    targets = jnp.stack([c.target for c in ctxs])
-
-    window_vmap = jax.jit(jax.vmap(
-        build_window_fn(ctxs[0]),
-        in_axes=(0, 0, pipeline.FederatedData(None, None, 0, 0), 0, 0, None)))
-
-    results = [SimulationResult(config=c.cfg) for c in ctxs]
-    window_size = _default_window(cfg, progress)
-    for start in range(0, cfg.epochs, window_size):
-        length = min(window_size, cfg.epochs - start)
-        contacts = jnp.asarray(np.stack([c.contacts.window(length) for c in ctxs]))
-        mask = _eval_mask(cfg, start, length)
-        states, rngs, traj = window_vmap(states, rngs, fed_stack, targets,
-                                         contacts, jnp.asarray(mask))
-        traj = jax.tree_util.tree_map(np.asarray, traj)
-        for s_i, result in enumerate(results):
-            per_seed = jax.tree_util.tree_map(lambda x: x[s_i], traj)
-            _append_window(result, per_seed, mask, start, cfg.num_vehicles,
-                           progress)
-    wall = time.time() - t0
-    for result in results:
-        result.wall_time = wall
-    return results
+    return backends_lib.get_backend(cfg.backend).run_seeds(
+        cfg, seeds, dataset=dataset, progress=progress)

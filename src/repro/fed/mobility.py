@@ -1,21 +1,59 @@
-"""Manhattan mobility model [34] over a RoadNetwork.
+"""Mobility models over a RoadNetwork, behind a string-keyed registry.
 
-Vehicles travel along edges at (roughly) constant speed; at each junction
-they turn with the Manhattan probabilities — straight 0.5, left 0.25,
-right 0.25 — generalized to arbitrary junction degrees: the edge most
-opposite the incoming direction gets probability 0.5 and the remainder is
-split evenly (dead ends force a U-turn). Positions are advanced in
-continuous time; one snapshot per global DFL epoch yields the time-varying
-contact graphs the learning layer consumes.
+The paper's process is Manhattan mobility [34]: vehicles travel along edges
+at (roughly) constant speed; at each junction they turn with the Manhattan
+probabilities — straight 0.5, left 0.25, right 0.25 — generalized to
+arbitrary junction degrees: the edge most opposite the incoming direction
+gets probability 0.5 and the remainder is split evenly (dead ends force a
+U-turn). Positions are advanced in continuous time; one snapshot per global
+DFL epoch yields the time-varying contact graphs the learning layer
+consumes.
+
+New mobility processes register a factory and are addressable by name from
+``SimulationConfig.mobility`` with no engine edits; a model only needs
+``advance_positions(num_epochs) -> [T, K, 2]`` (and must consume its RNG
+epoch by epoch so trajectories are invariant to window chunking):
+
+    @register_mobility("waypoint")
+    class RandomWaypoint: ...
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Callable
 
 import numpy as np
 
 from .topology import RoadNetwork, contact_matrices, contact_matrix
+
+_MOBILITY_MODELS: dict[str, Callable] = {}
+
+
+def register_mobility(name: str):
+    """Register ``factory(net: RoadNetwork, cfg: MobilityConfig)`` under
+    ``name``. Decorator; returns the factory unchanged."""
+
+    def deco(factory: Callable):
+        _MOBILITY_MODELS[name] = factory
+        return factory
+
+    return deco
+
+
+def available_mobility_models() -> list[str]:
+    return sorted(_MOBILITY_MODELS)
+
+
+def make_mobility(name: str, net: RoadNetwork, cfg: "MobilityConfig"):
+    """Build a registered mobility process by name."""
+    try:
+        factory = _MOBILITY_MODELS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown mobility model {name!r} "
+            f"(registered: {'|'.join(available_mobility_models())})") from None
+    return factory(net, cfg)
 
 
 @dataclass
@@ -28,6 +66,7 @@ class MobilityConfig:
     seed: int = 0
 
 
+@register_mobility("manhattan")
 class ManhattanMobility:
     """Stateful vehicle mobility process. ``step()`` advances one epoch and
     returns the [K, K] contact matrix at the snapshot."""

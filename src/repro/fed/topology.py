@@ -1,14 +1,22 @@
-"""Road-network topologies (paper Sec. VI-A.3): grid, random, spider.
+"""Road-network topologies (paper Sec. VI-A.3): grid, random, spider — plus
+beyond-paper nets, all behind a string-keyed registry.
 
 A road network is an undirected graph of junction nodes with 2-D positions;
 vehicles move along edges (see mobility.py). This replaces the SUMO traffic
 simulator (unavailable offline) — the learning system only ever consumes the
 resulting time-varying contact graphs.
+
+New scenarios register a factory and are immediately addressable by name
+from ``SimulationConfig.road_net`` and the sweep runner — no engine edits:
+
+    @register_road_network("roundabout")
+    def roundabout_net(seed: int = 0) -> RoadNetwork: ...
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Callable
 
 import numpy as np
 
@@ -48,6 +56,27 @@ class RoadNetwork:
                     seen.add(v)
                     stack.append(v)
         return len(seen) == self.num_nodes
+
+
+_ROAD_NETWORKS: dict[str, Callable[..., RoadNetwork]] = {}
+
+
+def register_road_network(name: str):
+    """Register ``factory(seed: int = 0) -> RoadNetwork`` under ``name``.
+
+    Decorator; returns the factory unchanged. Re-registering a name replaces
+    the previous factory (useful for test doubles).
+    """
+
+    def deco(factory: Callable[..., RoadNetwork]):
+        _ROAD_NETWORKS[name] = factory
+        return factory
+
+    return deco
+
+
+def available_road_networks() -> list[str]:
+    return sorted(_ROAD_NETWORKS)
 
 
 def grid_net(side: int = 10, spacing: float = 100.0) -> RoadNetwork:
@@ -131,14 +160,43 @@ def spider_net(arms: int = 10, circles: int = 10, radius_inc: float = 100.0) -> 
     return RoadNetwork("spider", pos_arr, np.array(sorted(set(edges)), dtype=np.int64))
 
 
+def highway_net(num_interchanges: int = 25, segment: float = 250.0,
+                separation: float = 120.0, ramp_every: int = 3) -> RoadNetwork:
+    """Highway corridor (beyond-paper scenario): a long main carriageway and
+    a parallel frontage road, linked by ramps at every ``ramp_every``-th
+    interchange. Long and thin — contact graphs are near-chains, the
+    opposite mixing regime from the well-connected grid/spider nets (gossip
+    information must travel the corridor hop by hop).
+    """
+    main = [[i * segment, 0.0] for i in range(num_interchanges)]
+    frontage = [[i * segment, separation] for i in range(num_interchanges)]
+    pos = np.array(main + frontage, dtype=np.float64)
+    edges = []
+    for i in range(num_interchanges - 1):
+        edges.append((i, i + 1))                                     # main
+        edges.append((num_interchanges + i, num_interchanges + i + 1))  # frontage
+    for i in range(0, num_interchanges, ramp_every):
+        edges.append((i, num_interchanges + i))                      # ramp
+    return RoadNetwork("highway", pos, np.array(sorted(edges), dtype=np.int64))
+
+
+# paper nets (Sec. VI-A.3) + beyond-paper scenarios; only `random` consumes
+# the seed — the others are deterministic layouts
+register_road_network("grid")(lambda seed=0: grid_net())
+register_road_network("random")(lambda seed=0: random_net(seed=seed))
+register_road_network("spider")(lambda seed=0: spider_net())
+register_road_network("highway")(lambda seed=0: highway_net())
+
+
 def make_road_network(name: str, seed: int = 0) -> RoadNetwork:
-    if name == "grid":
-        return grid_net()
-    if name == "random":
-        return random_net(seed=seed)
-    if name == "spider":
-        return spider_net()
-    raise ValueError(f"unknown road network {name!r} (grid|random|spider)")
+    """Build a registered road network by name (the scenario registry)."""
+    try:
+        factory = _ROAD_NETWORKS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown road network {name!r} "
+            f"(registered: {'|'.join(available_road_networks())})") from None
+    return factory(seed=seed)
 
 
 def contact_matrix(positions: np.ndarray, comm_range: float = 100.0) -> np.ndarray:

@@ -40,25 +40,31 @@ def gossip_mix_matmul(mixing: Array, flat: Array, *, interpret: bool = False,
                       block_p: int = BLOCK_P) -> Array:
     """out[k, p] = sum_j mixing[k, j] * flat[j, p], via pl.pallas_call.
 
-    mixing: [K, K] float; flat: [K, P] any float dtype. Returns flat.dtype.
+    mixing: [K_out, K_in] float; flat: [K_in, P] any float dtype. Returns
+    flat.dtype. K_out == K_in is the classic full gossip mix; rectangular
+    blocks are the per-shard partial matmul of the shard_map backend (each
+    shard multiplies the column block it owns rows for — see
+    core.vehicle_axis.sharded_mix).
     """
-    k, p = flat.shape
-    assert mixing.shape == (k, k), (mixing.shape, flat.shape)
-    k_pad = _pad_to(max(k, SUBLANE), SUBLANE)
+    k_in, p = flat.shape
+    k_out = mixing.shape[0]
+    assert mixing.shape[1] == k_in, (mixing.shape, flat.shape)
+    k_out_pad = _pad_to(max(k_out, SUBLANE), SUBLANE)
+    k_in_pad = _pad_to(max(k_in, SUBLANE), SUBLANE)
     p_pad = _pad_to(max(p, LANE), block_p)
 
-    w = jnp.zeros((k_pad, k_pad), mixing.dtype).at[:k, :k].set(mixing)
-    x = jnp.zeros((k_pad, p_pad), flat.dtype).at[:k, :p].set(flat)
+    w = jnp.zeros((k_out_pad, k_in_pad), mixing.dtype).at[:k_out, :k_in].set(mixing)
+    x = jnp.zeros((k_in_pad, p_pad), flat.dtype).at[:k_in, :p].set(flat)
 
     out = pl.pallas_call(
         _mix_kernel,
         grid=(p_pad // block_p,),
         in_specs=[
-            pl.BlockSpec((k_pad, k_pad), lambda i: (0, 0)),      # W resident
-            pl.BlockSpec((k_pad, block_p), lambda i: (0, i)),    # X tile
+            pl.BlockSpec((k_out_pad, k_in_pad), lambda i: (0, 0)),  # W resident
+            pl.BlockSpec((k_in_pad, block_p), lambda i: (0, i)),    # X tile
         ],
-        out_specs=pl.BlockSpec((k_pad, block_p), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((k_pad, p_pad), flat.dtype),
+        out_specs=pl.BlockSpec((k_out_pad, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k_out_pad, p_pad), flat.dtype),
         interpret=interpret,
     )(w, x)
-    return out[:k, :p]
+    return out[:k_out, :p]

@@ -16,14 +16,19 @@ def _use_kernel(interpret: bool) -> bool:
 def mix_params_pallas(mixing: jax.Array, params, *, interpret: bool = False):
     """Drop-in replacement for repro.core.aggregation.mix_params.
 
-    Flattens every leaf to [K, -1], runs the blocked kernel, reshapes back.
-    Falls back to the jnp oracle off-TPU unless ``interpret`` is set.
+    Flattens every leaf to [K_in, -1], runs the blocked kernel, reshapes
+    back. ``mixing`` may be rectangular [K_out, K_in] — the per-shard
+    partial-matmul block of the shard_map backend — in which case the output
+    leaves carry K_out rows. Falls back to the jnp oracle off-TPU unless
+    ``interpret`` is set.
     """
     run = (lambda w, x: gossip_mix_matmul(w, x, interpret=interpret)) \
         if _use_kernel(interpret) else gossip_mix_matmul_ref
 
+    k_out = mixing.shape[0]
+
     def mix_leaf(x: jax.Array) -> jax.Array:
         flat = x.reshape(x.shape[0], -1)
-        return run(mixing, flat).reshape(x.shape)
+        return run(mixing, flat).reshape((k_out,) + x.shape[1:])
 
     return jax.tree_util.tree_map(mix_leaf, params)

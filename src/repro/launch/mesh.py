@@ -23,11 +23,31 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_federation_mesh(*, multi_pod: bool = False, vehicle: int = 16, fsdp: int = 1):
-    """Mesh (pod?, vehicle, fsdp, model) over the production devices.
+def make_federation_mesh(*, multi_pod: bool = False, vehicle: int = 16,
+                         fsdp: int = 1, model: int = 16, devices=None):
+    """Mesh (pod?, vehicle, fsdp, model) for DFL training.
 
-    vehicle * fsdp must equal the production data-axis size (16).
+    Production form (``devices=None``): reshapes the production devices —
+    vehicle * fsdp must equal the production data-axis size (16) and the
+    model axis is the production 16.
+
+    Explicit form: ``devices`` (any array-like of jax devices, e.g. host CPU
+    devices under ``--xla_force_host_platform_device_count``) is reshaped to
+    (vehicle, fsdp, model) — this is how the shard_map execution backend
+    (fed.backends) builds its vehicle-sharded mesh on whatever hardware is
+    present. ``multi_pod`` applies to the production form only.
     """
+    if devices is not None:
+        devices = np.asarray(devices)
+        if devices.size != vehicle * fsdp * model:
+            raise ValueError(
+                f"{devices.size} devices cannot fill a "
+                f"({vehicle}, {fsdp}, {model}) federation mesh")
+        return Mesh(devices.reshape(vehicle, fsdp, model),
+                    ("vehicle", "fsdp", "model"))
+    if model != 16:
+        raise ValueError("the production federation mesh has a fixed model "
+                         "axis of 16; pass explicit devices to change it")
     if vehicle * fsdp != 16:
         raise ValueError(f"vehicle({vehicle}) * fsdp({fsdp}) must be 16")
     prod = make_production_mesh(multi_pod=multi_pod)

@@ -71,3 +71,47 @@ def test_dfl_round_runs_and_updates_state():
     assert out.epoch == 1
     np.testing.assert_allclose(np.asarray(out.state_matrix).sum(1), 1.0, atol=1e-5)
     np.testing.assert_allclose(np.asarray(out.params["w"]), 2.0, atol=1e-6)
+
+
+def test_d_sgd_round_uses_metropolis_consensus():
+    """d_sgd with a +1 'trainer': the mix is doubly stochastic, so the
+    federation mean advances by exactly the local increment."""
+    k = 5
+    c = _contact(k, 6, p=0.6)
+    x0 = jnp.asarray(np.random.default_rng(1).normal(size=(k, 3)), jnp.float32)
+    fed = dfl_dds.init_federation({"w": x0}, {"c": jnp.zeros((k,))}, k)
+
+    def local_train(p, o, b, r):
+        return jax.tree_util.tree_map(lambda x: x + 1, p), o, {"loss": jnp.zeros(())}
+
+    target = jnp.ones((k,)) / k
+    out, diags = baselines.d_sgd_round(
+        fed, c, target, jnp.zeros((k, 1)), jax.random.PRNGKey(0), local_train,
+        lr=0.1, local_steps=1)
+    np.testing.assert_allclose(np.asarray(diags["mixing"]).sum(0), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(diags["mixing"]).sum(1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out.params["w"]).mean(axis=0),
+                               np.asarray(x0).mean(axis=0) + 1.0, atol=1e-5)
+
+
+def test_d_fedavg_round_trains_before_aggregating():
+    """Train-then-aggregate: the mixed models are convex combinations of the
+    TRAINED (+1) models, and the state bump lands before aggregation."""
+    k = 4
+    c = _contact(k, 3)
+    x0 = jnp.asarray(np.random.default_rng(2).normal(size=(k, 3)), jnp.float32)
+    fed = dfl_dds.init_federation({"w": x0}, {"c": jnp.zeros((k,))}, k)
+
+    def local_train(p, o, b, r):
+        return jax.tree_util.tree_map(lambda x: x + 1, p), o, {"loss": jnp.zeros(())}
+
+    counts = jnp.asarray([1, 2, 3, 4], jnp.float32)
+    target = state_vector.target_state(counts)
+    out, diags = baselines.d_fedavg_round(
+        fed, c, target, jnp.zeros((k, 1)), jax.random.PRNGKey(0), local_train,
+        sample_counts=counts, lr=0.1, local_steps=2)
+    mixing = np.asarray(diags["mixing"])
+    np.testing.assert_allclose(np.asarray(out.params["w"]),
+                               mixing @ (np.asarray(x0) + 1.0), atol=1e-5)
+    # state: bump (diag) then aggregate -> rows are mixes of one-hot rows
+    np.testing.assert_allclose(np.asarray(out.state_matrix), mixing, atol=1e-5)

@@ -13,6 +13,19 @@ def test_networks_connected_and_sized(name):
     assert net.is_connected()
 
 
+def test_highway_structure_and_mobility():
+    net = topo.make_road_network("highway")
+    assert net.is_connected() and net.num_nodes == 50
+    # two parallel carriageways linked by ramps: max degree 3, long span
+    assert net.degrees().max() <= 3
+    # Manhattan mobility runs on it (vehicles stay on the corridor edges)
+    mob = mob_lib.ManhattanMobility(net, mob_lib.MobilityConfig(num_vehicles=5, seed=0))
+    pos = mob.advance_positions(3)
+    assert pos.shape == (3, 5, 2)
+    y_min, y_max = net.positions[:, 1].min(), net.positions[:, 1].max()
+    assert (pos[..., 1] >= y_min - 1e-6).all() and (pos[..., 1] <= y_max + 1e-6).all()
+
+
 def test_grid_degree_distribution():
     # paper: degrees 2/3/4 with frequencies {4, 32, 64}
     net = topo.grid_net()
