@@ -1,23 +1,47 @@
 """Paper Fig. 8: average accuracy on MNIST under grid / random / spider road
-networks, DFL-DDS vs DFL vs SP (Balanced & non-IID)."""
+networks, DFL-DDS vs DFL vs SP (Balanced & non-IID). Registered as campaign
+figure ``fig8``; figs 9/10 reuse its grid scenarios via the results store."""
 from __future__ import annotations
 
-from .common import csv_row, run_or_load
+from repro.fed import metrics
+from repro.launch import campaign as campaign_lib
+from repro.launch.campaign import FigureSpec
+
+from .common import accuracy_ordering_checks, figure_csv, run_figure
+
+
+def _derive(spec, rows):
+    out = []
+    for key, row in rows.items():
+        kl = campaign_lib.mean_kl_trace(row)
+        out.append({
+            "figure": spec.name, "topology": key[1], "algorithm": key[3],
+            "final_acc_mean": row["final_accuracy_mean"],
+            "final_acc_std": row["final_accuracy_std"],
+            "kl_final": float(kl[-1]),
+            # positive = the run moved its state vectors TOWARD the global
+            # data distribution (diversified its sources, Eq. 9)
+            "kl_gain": metrics.diversity_gain(kl),
+            "comm_mb": campaign_lib.total_comm_mb(row),
+        })
+    return out
+
+
+def _check(spec, rows):
+    return accuracy_ordering_checks(rows)
+
+
+FIGURE = campaign_lib.register_figure(FigureSpec(
+    name="fig8",
+    title="Fig. 8 — MNIST accuracy across road networks "
+          "(DFL-DDS vs DFL vs SP)",
+    dataset="mnist", road_nets=("grid", "random", "spider"),
+    algorithms=("dds", "dfl", "sp"),
+    derive=_derive, check=_check))
 
 
 def main() -> list[str]:
-    rows = [csv_row("figure", "topology", "algorithm", "epoch", "avg_accuracy")]
-    for net in ("grid", "random", "spider"):
-        finals = {}
-        for algo in ("dds", "dfl", "sp"):
-            res = run_or_load(algorithm=algo, dataset="mnist", road_net=net)
-            for e, a in zip(res.epochs_evaluated, res.avg_accuracy):
-                rows.append(csv_row("fig8", net, algo, e, f"{a:.4f}"))
-            finals[algo] = res.avg_accuracy[-1]
-        rows.append(csv_row("fig8", net, "ORDERING",
-                            "dds>=dfl", int(finals["dds"] >= finals["dfl"] - 0.02),
-                            "dds>=sp", int(finals["dds"] >= finals["sp"] - 0.02)))
-    return rows
+    return figure_csv(run_figure("fig8"))
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ from __future__ import annotations
 from repro.fed.simulator import SimulationConfig
 from repro.launch import sweep as sweep_lib
 
-from .common import dataset
+from .common import dataset_factory
 
 
 def main() -> list[str]:
@@ -23,7 +23,7 @@ def main() -> list[str]:
         algorithms=("dds", "dfl"),
         seeds=(0, 1),
         base=base)
-    results = sweep_lib.run_sweep(spec, dataset=dataset("mnist"))
+    results = sweep_lib.run_sweep(spec, dataset=dataset_factory("smoke")("mnist"))
     return sweep_lib.summary_rows(results)
 
 

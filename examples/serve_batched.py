@@ -6,6 +6,7 @@ Demonstrates all three cache families: KV cache (dense/MoE), RWKV recurrent
 state (attention-free), and hybrid KV+SSM state (hymba).
 
   PYTHONPATH=src python examples/serve_batched.py --arch hymba-1.5b --batch 4
+  PYTHONPATH=src python examples/serve_batched.py --smoke   # CI smoke test
 """
 import argparse
 import sys
@@ -26,7 +27,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny settings so the run finishes in seconds")
     args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.prompt_len, args.gen = 1, 8, 4
 
     cfg = get_config(args.arch).reduced()
     rng = jax.random.PRNGKey(0)
@@ -73,6 +78,8 @@ def main() -> None:
           f"({dt/max(args.gen-1,1)*1000:.0f} ms/step, batched)")
     for i in range(b):
         print(f"  req{i}: {toks[i, :12].tolist()}...")
+    assert toks.shape == (b, args.gen)
+    print(f"serve_batched OK: {cfg.name} decoded {args.gen}x{b} tokens")
 
 
 if __name__ == "__main__":

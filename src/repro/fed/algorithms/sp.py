@@ -8,6 +8,9 @@ from ...core import baselines
 from ...data import pipeline
 from .base import Algorithm, AlgorithmSetup, register_algorithm
 
+# upper bound on the materialized "full local set" batch (see SP.sample)
+FULL_BATCH_CAP = 256
+
 
 @register_algorithm
 class SP(Algorithm):
@@ -35,12 +38,14 @@ class SP(Algorithm):
 
     def sample(self, setup, fed_data, rng):
         # SP uses the full local dataset per iteration (paper Sec. VI-A.5);
-        # cap the materialized batch at 512 resampled-from-own-partition
-        # samples — an unbiased full-batch estimate that keeps single-core
-        # benchmark runs tractable. The cap reads the (static) index-table
-        # width at trace time so it also holds under the run_seeds vmap,
-        # where tables are padded to a common width.
-        full_bs = min(int(fed_data.index_table.shape[-1]), 512)
+        # cap the materialized batch at FULL_BATCH_CAP
+        # resampled-from-own-partition samples — an unbiased full-batch
+        # estimate that keeps single-core benchmark/campaign runs tractable
+        # (at the smoke tier one SP epoch would otherwise cost ~8x a DDS
+        # epoch). The cap reads the (static) index-table width at trace time
+        # so it also holds under the run_seeds vmap, where tables are padded
+        # to a common width.
+        full_bs = min(int(fed_data.index_table.shape[-1]), FULL_BATCH_CAP)
         if setup.shard.is_sharded:
             return pipeline.sample_full_batches_sliced(
                 fed_data, rng, full_bs, take_rows=setup.shard.local_rows)

@@ -92,6 +92,41 @@ def _drive_windows(ctx, window_fn, progress: bool):
     return result
 
 
+# Seed-vmapped window programs, reused across run_seeds calls whose traced
+# structure matches. Scenario axes (road net, distribution, seeds) only
+# change *arguments* of the window — contacts, index tables, sample counts,
+# targets, initial states — so one compiled program serves a whole figure
+# grid: the campaign's 9-scenario Fig. 8 compiles 3 programs (one per
+# algorithm), not 9. The key pins everything the trace bakes in as a
+# constant: the algorithm (round structure), the dataset object (eval
+# tensors + loss fn), scale statics, and the padded index-table width.
+# Keyed on id(dataset): callers that share runs must share the dataset
+# object (run_sweep and the campaign runner both load it once).
+_SEED_WINDOW_CACHE: dict[tuple, Any] = {}
+_SEED_WINDOW_CACHE_MAX = 8
+
+# config fields that reach the traced window only through ARGUMENTS (or
+# drive host-side work), so two configs differing only here may share a
+# compiled program. Everything NOT listed lands in the cache key — a new
+# SimulationConfig field is conservatively assumed trace-baked, costing a
+# recompile rather than risking stale-program reuse. (mix_params_fn is
+# special-cased: a bare callable can't be keyed, so it bypasses the cache.)
+_ARGUMENT_ONLY_FIELDS = frozenset({
+    "road_net", "distribution", "mobility", "seed", "epochs", "eval_every",
+    "comm_range", "epoch_duration", "p_drop",
+    "use_scan_engine", "window_size", "backend", "mix_params_fn",
+})
+
+
+def _seed_window_key(cfg, ds, n_seeds: int, table_shape) -> tuple:
+    from dataclasses import fields
+
+    traced = tuple(
+        (f.name, getattr(cfg, f.name)) for f in fields(cfg)
+        if f.name not in _ARGUMENT_ONLY_FIELDS)
+    return (id(ds), n_seeds, tuple(table_shape), traced)
+
+
 @register_backend
 class VmapBackend(Backend):
     """Single-device fused engine: one jitted scan per window, seeds vmapped."""
@@ -117,9 +152,22 @@ class VmapBackend(Backend):
         rngs = jnp.stack([c.init_rng for c in ctxs])
         targets = jnp.stack([c.target for c in ctxs])
 
-        window_vmap = jax.jit(jax.vmap(
-            engine_lib.build_window_fn(ctxs[0]),
-            in_axes=(0, 0, pipeline.FederatedData(None, None, 0, 0), 0, 0, None)))
+        # the deprecated mix_params_fn callable can't be keyed — skip the cache
+        cache_key = (_seed_window_key(cfg, ds, len(seeds),
+                                      fed_stack.index_table.shape)
+                     if cfg.mix_params_fn is None else None)
+        # entries pin the dataset object so its id() (part of the key) can't
+        # be recycled onto a different dataset while the entry lives
+        hit = _SEED_WINDOW_CACHE.get(cache_key)
+        window_vmap = hit[0] if hit else None
+        if window_vmap is None:
+            window_vmap = jax.jit(jax.vmap(
+                engine_lib.build_window_fn(ctxs[0]),
+                in_axes=(0, 0, pipeline.FederatedData(None, None, 0, 0), 0, 0, None)))
+            if cache_key is not None:
+                if len(_SEED_WINDOW_CACHE) >= _SEED_WINDOW_CACHE_MAX:
+                    _SEED_WINDOW_CACHE.pop(next(iter(_SEED_WINDOW_CACHE)))
+                _SEED_WINDOW_CACHE[cache_key] = (window_vmap, ds)
 
         results = [engine_lib.SimulationResult(config=c.cfg) for c in ctxs]
         window_size = engine_lib._default_window(cfg, progress)
@@ -182,6 +230,8 @@ class ShardMapBackend(Backend):
             "consensus": P(),
             "entropy": P(),
             "kl_divergence": P(),
+            "kl_mean": P(),                   # replicated: computed from the
+            "comm_mb": P(),                   # replicated [K, K] matrices
             "loss": P(),
         }
         window = shard_map(

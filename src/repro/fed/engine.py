@@ -126,10 +126,32 @@ class SimulationResult:
     entropy: list[np.ndarray] = field(default_factory=list)            # [K] per eval
     kl_divergence: list[np.ndarray] = field(default_factory=list)      # [K] per eval
     consensus_distance: list[float] = field(default_factory=list)
+    # full per-epoch traces (every global epoch, not just eval epochs):
+    # mean state-vector KL-to-target (the paper's diversity measure, Eq. 9)
+    # and the communication volume of that round's V2V exchanges in MB
+    kl_trace: list[float] = field(default_factory=list)
+    comm_mb: list[float] = field(default_factory=list)
     wall_time: float = 0.0
 
     def final_accuracy(self) -> float:
         return self.avg_accuracy[-1] if self.avg_accuracy else float("nan")
+
+    def total_comm_mb(self) -> float:
+        return float(np.sum(self.comm_mb)) if self.comm_mb else 0.0
+
+
+def model_payload_bytes(params_stack) -> int:
+    """Bytes of ONE vehicle's flattened model (the stack divided by its
+    leading vehicle axis) — the parameter payload of a single V2V exchange."""
+    leaves = jax.tree_util.tree_leaves(params_stack)
+    return sum(l.size // l.shape[0] * l.dtype.itemsize for l in leaves)
+
+
+def exchange_payload_mb(ctx: "EngineContext") -> float:
+    """MB one directed V2V exchange ships: the model plus the [K] state
+    vector (paper Sec. V-A: vehicles exchange both every contact)."""
+    return (model_payload_bytes(ctx.setup.params_stack)
+            + ctx.total_nodes * 4) / 1e6
 
 
 def make_local_train_fn(loss_fn, optimizer):
@@ -328,6 +350,7 @@ def build_window_fn(ctx: EngineContext) -> Callable:
     shard = ctx.setup.shard
     # rows this trace sees: the full stack, or this shard's block
     local_nodes = vehicle_axis.local_nodes(ctx.total_nodes, shard)
+    payload_mb = exchange_payload_mb(ctx)
 
     def window(state, rng, fed_data, target, contacts, eval_mask):
         def evaluate(st):
@@ -347,11 +370,16 @@ def build_window_fn(ctx: EngineContext) -> Callable:
             batch = sample_fn(fed_data, kb)
             st, diags = round_fn(st, contacts_t, target, batch, kr, fed_data)
             accs, consensus = jax.lax.cond(do_eval, evaluate, skip, st)
+            # directed V2V exchanges this round: contact edges minus the
+            # always-on self loops (contacts are replicated on every shard)
+            edges = jnp.sum(contacts_t) - jnp.trace(contacts_t)
             out = {
                 "accuracy": accs,
                 "consensus": consensus,
                 "entropy": diags["entropy"],
                 "kl_divergence": diags["kl_divergence"],
+                "kl_mean": jnp.mean(diags["kl_divergence"]),
+                "comm_mb": edges.astype(jnp.float32) * payload_mb,
                 # per-shard mean of equal row counts -> pmean == global mean
                 "loss": shard.pmean(jnp.mean(diags["loss"])),
             }
@@ -388,6 +416,9 @@ def _append_window(result: SimulationResult, traj, mask: np.ndarray, start: int,
     ent = np.asarray(traj["entropy"])
     kl = np.asarray(traj["kl_divergence"])
     consensus = np.asarray(traj["consensus"])
+    # full per-epoch traces (no eval mask): diversity + communication volume
+    result.kl_trace.extend(float(v) for v in np.asarray(traj["kl_mean"]))
+    result.comm_mb.extend(float(v) for v in np.asarray(traj["comm_mb"]))
     for i in np.nonzero(mask)[0]:
         accs = acc[i, :num_vehicles]
         result.epochs_evaluated.append(start + int(i) + 1)

@@ -30,3 +30,20 @@ def epochs_to_target(avg_acc_curve: np.ndarray, target: float) -> int | None:
     Returns None if never reached (the paper's red-arrow cases)."""
     hits = np.nonzero(np.asarray(avg_acc_curve) >= target)[0]
     return int(hits[0]) + 1 if len(hits) else None
+
+
+def mean_std(per_seed: np.ndarray, axis: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Seed-aggregate a stacked [S, ...] metric: (mean, std) over ``axis``
+    — how the campaign results store reports scalars (population std, as
+    the paper's error bars)."""
+    a = np.asarray(per_seed, np.float64)
+    return a.mean(axis=axis), a.std(axis=axis)
+
+
+def diversity_gain(kl_trace: np.ndarray) -> float:
+    """Drop in mean state-vector KL-to-target over a run (first - last epoch):
+    how much the algorithm diversified its data sources (positive = gain)."""
+    t = np.asarray(kl_trace, np.float64)
+    if t.size == 0:
+        return 0.0
+    return float(t[0] - t[-1])

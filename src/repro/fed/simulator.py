@@ -46,6 +46,7 @@ def run_legacy_loop(ctx: EngineContext, progress: bool = False) -> SimulationRes
     result = SimulationResult(config=cfg)
     state, rng = ctx.init_state, ctx.init_rng
     round_fn, eval_all = ctx.round_jit, ctx.eval_jit
+    payload_mb = engine_lib.exchange_payload_mb(ctx)
 
     for epoch in range(cfg.epochs):
         contacts = jnp.asarray(ctx.contacts.window(1)[0])
@@ -53,6 +54,9 @@ def run_legacy_loop(ctx: EngineContext, progress: bool = False) -> SimulationRes
         batch = ctx.sample_fn(ctx.fed_data, kb)
         state, diags = round_fn(state, contacts, ctx.target, batch, kr,
                                 ctx.fed_data)
+        c = np.asarray(contacts)
+        result.kl_trace.append(float(np.mean(np.asarray(diags["kl_divergence"]))))
+        result.comm_mb.append(float(c.sum() - np.trace(c)) * payload_mb)
         if (epoch + 1) % cfg.eval_every == 0 or epoch == cfg.epochs - 1:
             _record(result, epoch, ctx.model_of(state), diags, eval_all,
                     progress, num_vehicles=cfg.num_vehicles)

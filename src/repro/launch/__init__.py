@@ -3,4 +3,4 @@
 NOTE: dryrun must be run as a module entry (python -m repro.launch.dryrun) so
 its XLA_FLAGS device-count override precedes jax initialization; it is not
 imported here."""
-from . import mesh, shapes, sharding, steps, sweep
+from . import campaign, mesh, report, results_store, shapes, sharding, steps, sweep

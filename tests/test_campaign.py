@@ -1,0 +1,233 @@
+"""Campaign layer: the JSONL results store, content hashing, the campaign
+runner (store caching + figure derive/check), the in-scan KL/communication
+traces it consumes, and the sweep/campaign CLIs."""
+import json
+import os
+import subprocess
+import sys
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import synthetic_mnist
+from repro.fed import engine
+from repro.fed.simulator import SimulationConfig, run_simulation
+from repro.launch import campaign as campaign_lib
+from repro.launch import report as report_lib
+from repro.launch.results_store import ResultsStore, jsonable
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def tiny_ds():
+    return synthetic_mnist(n_train=1200, n_test=240)
+
+
+def _base(**kw):
+    base = dict(num_vehicles=6, epochs=4, eval_every=2, eval_samples=200,
+                local_steps=2, batch_size=16, p1_steps=20, lr=0.15)
+    base.update(kw)
+    return SimulationConfig(**base)
+
+
+# ---------------------------------------------------------------- store ----
+
+def test_results_store_roundtrip_and_last_wins(tmp_path):
+    store = ResultsStore(str(tmp_path / "s.jsonl"))
+    store.append({"spec_hash": "aaaa", "v": 1})
+    store.append({"spec_hash": "bbbb", "v": 2})
+    store.append({"spec_hash": "aaaa", "v": 3})  # duplicate hash
+    fresh = ResultsStore(str(tmp_path / "s.jsonl"))
+    rows = fresh.load()
+    assert len(fresh) == 2 and "aaaa" in fresh
+    assert rows["aaaa"]["v"] == 3  # last write wins
+    assert ResultsStore(str(tmp_path / "missing.jsonl")).rows() == []
+
+
+def test_results_store_requires_hash(tmp_path):
+    with pytest.raises(ValueError):
+        ResultsStore(str(tmp_path / "s.jsonl")).append({"v": 1})
+
+
+def test_results_store_skips_torn_lines(tmp_path):
+    """A run killed mid-append must not wedge the store: malformed lines
+    are skipped with a warning, intact rows still load."""
+    path = tmp_path / "s.jsonl"
+    path.write_text('{"spec_hash": "good", "v": 1}\n{"spec_hash": "to')
+    with pytest.warns(UserWarning, match="malformed"):
+        rows = ResultsStore(str(path)).load()
+    assert list(rows) == ["good"]
+
+
+def test_jsonable_handles_numpy():
+    out = jsonable({"a": np.float32(1.5), "b": np.arange(3),
+                    "c": (np.int64(2),)})
+    assert json.dumps(out)  # fully serializable
+    assert out == {"a": 1.5, "b": [0, 1, 2], "c": [2]}
+
+
+# ----------------------------------------------------------------- hash ----
+
+def test_spec_hash_ignores_execution_knobs(tiny_ds):
+    sig = campaign_lib.dataset_signature(tiny_ds)
+    cfg = _base()
+    h = campaign_lib.spec_hash(cfg, (0, 1), sig)
+    for knob in (dict(backend="shard_map"), dict(mixing_backend="pallas"),
+                 dict(use_scan_engine=False), dict(window_size=2)):
+        assert campaign_lib.spec_hash(replace(cfg, **knob), (0, 1), sig) == h
+
+
+def test_spec_hash_tracks_semantic_changes(tiny_ds):
+    sig = campaign_lib.dataset_signature(tiny_ds)
+    cfg = _base()
+    h = campaign_lib.spec_hash(cfg, (0, 1), sig)
+    assert campaign_lib.spec_hash(replace(cfg, algorithm="dfl"), (0, 1), sig) != h
+    assert campaign_lib.spec_hash(replace(cfg, lr=0.2), (0, 1), sig) != h
+    assert campaign_lib.spec_hash(cfg, (0, 1, 2), sig) != h
+    assert campaign_lib.spec_hash(cfg, (0, 1), ["mnist", 99, 9]) != h
+
+
+# --------------------------------------------------------- engine traces ----
+
+def test_scan_traces_match_legacy_loop(tiny_ds):
+    """The new full-epoch traces (mean KL-to-target, comm volume) are
+    identical through the fused scan and the legacy per-epoch loop."""
+    cfg = _base(algorithm="dds")
+    scan = run_simulation(cfg, dataset=tiny_ds)
+    legacy = run_simulation(replace(cfg, use_scan_engine=False), dataset=tiny_ds)
+    assert len(scan.kl_trace) == cfg.epochs == len(scan.comm_mb)
+    np.testing.assert_allclose(scan.kl_trace, legacy.kl_trace, atol=1e-5)
+    np.testing.assert_allclose(scan.comm_mb, legacy.comm_mb, rtol=1e-6)
+
+
+def test_comm_volume_counts_contact_edges(tiny_ds):
+    """comm_mb = (#contacts - self-loops) x per-exchange payload, per epoch."""
+    cfg = _base(algorithm="dds", epochs=3)
+    ctx = engine.build_context(cfg, dataset=tiny_ds)
+    payload = engine.exchange_payload_mb(ctx)
+    contacts = engine.ContactStream(
+        cfg, ctx.contacts.mob.net).window(cfg.epochs)
+    expected = [(c.sum() - np.trace(c)) * payload for c in contacts]
+    res = run_simulation(cfg, dataset=tiny_ds)
+    np.testing.assert_allclose(res.comm_mb, expected, rtol=1e-6)
+    assert res.total_comm_mb() == pytest.approx(sum(expected), rel=1e-6)
+
+
+# ------------------------------------------------------------- campaign ----
+
+@pytest.fixture
+def tiny_figure():
+    """A registered figure over a 1x2 grid with a derive + always-on check;
+    unregistered afterwards so the real figure registry stays clean."""
+    spec = campaign_lib.FigureSpec(
+        name="figtest", title="Test figure", dataset="mnist",
+        road_nets=("grid",), algorithms=("dds", "dfl"),
+        derive=lambda s, rows: campaign_lib.default_table(rows),
+        check=lambda s, rows: [campaign_lib.Check(
+            "finite_finals",
+            all(np.isfinite(r["final_accuracy_mean"]) for r in rows.values()),
+            "finals finite")])
+    campaign_lib.register_figure(spec)
+    yield spec
+    campaign_lib._FIGURES.pop("figtest", None)
+
+
+def test_run_campaign_runs_derives_checks_and_caches(tmp_path, tiny_ds,
+                                                     tiny_figure):
+    spec = campaign_lib.CampaignSpec(
+        name="test", figures=("figtest",), seeds=(0, 1),
+        base=_base(), dataset_factory=lambda name: tiny_ds,
+        store_path=str(tmp_path / "store.jsonl"),
+        results_md=str(tmp_path / "RESULTS.md"))
+    results = campaign_lib.run_campaign(spec)
+    assert len(results) == 1
+    fr = results[0]
+    assert {r["algorithm"] for r in fr.table} == {"dds", "dfl"}
+    assert fr.passed and fr.checks[0].name == "finite_finals"
+
+    # store: one row per scenario, with per-seed curves and full traces
+    store = ResultsStore(spec.store_path)
+    assert len(store) == 2
+    for row in store.rows():
+        assert len(row["avg_accuracy"]) == 2          # seeds
+        assert len(row["kl_trace"][0]) == spec.base.epochs
+        assert len(row["comm_mb"][0]) == spec.base.epochs
+        assert row["engine"]["path"] == "run_sweep/run_seeds"
+
+    # report rendered with figure title and check marks
+    md = (tmp_path / "RESULTS.md").read_text()
+    assert "Test figure" in md and "finite_finals" in md and "✅" in md
+
+    # second run: fully cached — no scenario re-runs, identical rows
+    before = (tmp_path / "store.jsonl").read_text()
+    results2 = campaign_lib.run_campaign(spec)
+    assert (tmp_path / "store.jsonl").read_text() == before
+    assert results2[0].scenario_rows[0]["spec_hash"] == \
+        fr.scenario_rows[0]["spec_hash"]
+
+
+def test_run_campaign_force_reruns(tmp_path, tiny_ds, tiny_figure):
+    spec = campaign_lib.CampaignSpec(
+        name="test", figures=("figtest",), seeds=(0,),
+        base=_base(epochs=2), dataset_factory=lambda name: tiny_ds,
+        store_path=str(tmp_path / "store.jsonl"))
+    campaign_lib.run_campaign(spec)
+    n_lines = len((tmp_path / "store.jsonl").read_text().splitlines())
+    campaign_lib.run_campaign(spec, force=True)
+    # forced rows are re-appended (store dedupes last-wins on load)
+    assert len((tmp_path / "store.jsonl").read_text().splitlines()) == 2 * n_lines
+    assert len(ResultsStore(str(tmp_path / "store.jsonl"))) == n_lines
+
+
+def test_unknown_figure_is_an_error():
+    with pytest.raises(ValueError, match="unknown figure"):
+        campaign_lib.get_figure("fig99")
+
+
+def test_report_renders_empty_and_failed_checks(tmp_path, tiny_figure):
+    spec = campaign_lib.CampaignSpec(name="t", figures=("figtest",))
+    fr = campaign_lib.FigureResult(
+        spec=tiny_figure, table=[],
+        checks=[campaign_lib.Check("bad", False, "detail")],
+        scenario_rows=[])
+    md = report_lib.render_results(spec, [fr])
+    assert "(no rows)" in md and "❌" in md and "0/1 passed" in md
+
+
+# ------------------------------------------------------------------ CLIs ----
+
+def _run_cli(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO_ROOT / 'src'}{os.pathsep}" + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run([sys.executable, *args], cwd=REPO_ROOT, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_sweep_cli_smoke():
+    proc = _run_cli(["-m", "repro.launch.sweep", "--vehicles", "6",
+                     "--epochs", "2", "--eval-every", "2", "--local-steps",
+                     "1", "--batch-size", "8", "--p1-steps", "10",
+                     "--algorithms", "dds", "--seeds", "0"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "# sweep done" in proc.stdout
+    assert "road_net,distribution,algorithm" in proc.stdout
+
+
+def test_benchmarks_campaign_cli(tmp_path):
+    store = tmp_path / "store.jsonl"
+    md = tmp_path / "RESULTS.md"
+    proc = _run_cli(["-m", "benchmarks.run", "--campaign", "smoke",
+                     "--figures", "fig2", "--seeds", "0", "1", "2",
+                     "--vehicles", "6", "--epochs", "4",
+                     "--store", str(store), "--results-md", str(md)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "ordering checks" in proc.stdout
+    rows = [json.loads(l) for l in store.read_text().splitlines()]
+    assert len(rows) == 2  # sp on grid + random
+    assert all(len(r["seeds"]) == 3 for r in rows)
+    text = md.read_text()
+    assert "Fig. 2" in text and "Scenario runs" in text

@@ -1,0 +1,32 @@
+"""The examples double as doctest-style smoke tests: each has a --smoke
+mode that finishes in seconds and prints a final 'OK' line asserted here.
+Run as subprocesses so the sys.path bootstrapping in the scripts is
+exercised exactly as a user would hit it."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _run_example(script, *args, timeout=900):
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, str(REPO_ROOT / "examples" / script), *args],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True,
+        timeout=timeout)
+
+
+@pytest.mark.parametrize("script,ok_line", [
+    ("quickstart.py", "quickstart OK"),
+    ("scenario_sweep.py", "scenario_sweep OK"),
+    ("serve_batched.py", "serve_batched OK"),
+])
+def test_example_smoke(script, ok_line):
+    proc = _run_example(script, "--smoke")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert ok_line in proc.stdout, proc.stdout[-2000:]

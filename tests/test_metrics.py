@@ -1,0 +1,60 @@
+"""fed.metrics edge cases: targets never reached, constant series, seed
+aggregation — the helpers every campaign figure derives from."""
+import numpy as np
+import pytest
+
+from repro.fed import metrics
+
+
+def test_epochs_to_target_first_hit():
+    curve = np.array([0.1, 0.3, 0.5, 0.4, 0.7])
+    assert metrics.epochs_to_target(curve, 0.5) == 3
+    # exact equality counts as reached
+    assert metrics.epochs_to_target(curve, 0.7) == 5
+
+
+def test_epochs_to_target_never_reached():
+    curve = np.array([0.1, 0.2, 0.3])
+    assert metrics.epochs_to_target(curve, 0.9) is None
+    # the fig9 'never' rendering relies on None, not an exception
+    assert metrics.epochs_to_target(np.array([]), 0.5) is None
+
+
+def test_pearson_constant_series_is_zero():
+    # zero variance on either side -> 0.0, never a division blow-up
+    const = np.full(10, 0.42)
+    varying = np.arange(10.0)
+    assert metrics.pearson(const, varying) == 0.0
+    assert metrics.pearson(varying, const) == 0.0
+    assert metrics.pearson(const, const) == 0.0
+
+
+def test_pearson_perfect_correlation():
+    x = np.arange(10.0)
+    assert metrics.pearson(x, 2 * x + 1) == pytest.approx(1.0)
+    assert metrics.pearson(x, -x) == pytest.approx(-1.0)
+
+
+def test_accuracy_cdf_is_monotone_and_bounded():
+    accs = np.array([0.2, 0.8, 0.5, 0.5, 0.9])
+    x, f = metrics.accuracy_cdf(accs)
+    assert (np.diff(x) >= 0).all() and (np.diff(f) >= 0).all()
+    assert f[-1] == 1.0
+    # explicit grid: CDF evaluated at arbitrary points
+    grid = np.array([0.0, 0.5, 1.0])
+    _, fg = metrics.accuracy_cdf(accs, grid)
+    assert fg[0] == 0.0 and fg[1] == pytest.approx(3 / 5) and fg[2] == 1.0
+
+
+def test_mean_std_over_seed_axis():
+    per_seed = np.array([[1.0, 2.0], [3.0, 4.0], [5.0, 6.0]])  # [S=3, T=2]
+    mean, std = metrics.mean_std(per_seed)
+    np.testing.assert_allclose(mean, [3.0, 4.0])
+    np.testing.assert_allclose(std, np.std(per_seed, axis=0))
+
+
+def test_diversity_gain():
+    assert metrics.diversity_gain(np.array([2.0, 1.5, 0.5])) == pytest.approx(1.5)
+    assert metrics.diversity_gain(np.array([])) == 0.0
+    # a run that diversifies AWAY from the target is a negative gain
+    assert metrics.diversity_gain(np.array([0.5, 1.0])) == pytest.approx(-0.5)
