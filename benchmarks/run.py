@@ -25,9 +25,9 @@ import time
 
 from repro.launch import campaign as campaign_lib
 
-from . import (common, fig2_cdf, fig3_correlation, fig6_7_cifar, fig8_mnist,
-               fig9_epochs_to_target, fig10_consensus, kernel_micro,
-               roofline_table, sweep_scenarios)
+from . import (common, engine_scale, fig2_cdf, fig3_correlation, fig6_7_cifar,
+               fig8_mnist, fig9_epochs_to_target, fig10_consensus,
+               kernel_micro, roofline_table, sweep_scenarios)
 
 BENCHMARKS = {
     "fig2_cdf": fig2_cdf.main,
@@ -37,6 +37,8 @@ BENCHMARKS = {
     "fig6_7_cifar": fig6_7_cifar.main,
     "fig10_consensus": fig10_consensus.main,
     "kernel_micro": kernel_micro.main,
+    "engine_scale": engine_scale.main,   # smoke K by default; full sweep via
+                                         # `python -m benchmarks.engine_scale`
     "roofline_table": roofline_table.main,
     "sweep_scenarios": sweep_scenarios.main,
 }

@@ -13,31 +13,60 @@ the vehicle axis — the TPU-native equivalent of V2V point-to-point exchange.
 leading vehicle axis. The hot path can be served by the Pallas ``gossip_mix``
 kernel (see repro.kernels.gossip_mix); the pure-jnp einsum below is the
 reference and the default on CPU.
+
+Every mixing constructor (and ``mix_params``) dispatches on the contact
+representation: a dense ``[K, K]`` matrix yields a dense row-stochastic W,
+a ``contacts.SparseContacts`` neighbour list yields a ``SparseMixing`` with
+the same weights on the same edges — the sparse O(K * D_max) twin of each
+dense O(K^2) path (see core/contacts.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from .contacts import SparseContacts, SparseMixing, self_slots, sparse_mix_array
+
 Array = jax.Array
 
 
-def mixing_from_alpha(alpha: Array, contact_matrix: Array) -> Array:
-    """Mask + renormalize alpha rows onto the contact set -> row-stochastic W."""
-    w = alpha * contact_matrix
+def _renormalize(idx: Array, w: Array) -> SparseMixing:
+    return SparseMixing(
+        idx, w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12))
+
+
+def mixing_from_alpha(alpha: Array, contacts) -> Array | SparseMixing:
+    """Mask + renormalize alpha rows onto the contact set -> row-stochastic W.
+
+    Dense: ``alpha`` [K, K] against the 0/1 contact matrix. Sparse: ``alpha``
+    [K, D] per-slot weights against a ``SparseContacts`` of the same layout.
+    """
+    if isinstance(contacts, SparseContacts):
+        return _renormalize(contacts.idx, alpha * contacts.mask)
+    w = alpha * contacts
     return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
 
 
-def uniform_mixing(contact_matrix: Array) -> Array:
+def uniform_mixing(contacts) -> Array | SparseMixing:
     """W[k, k'] = 1/|P_k| on the contact set (incl. self)."""
-    c = contact_matrix.astype(jnp.float32)
+    if isinstance(contacts, SparseContacts):
+        return _renormalize(contacts.idx, contacts.mask.astype(jnp.float32))
+    c = contacts.astype(jnp.float32)
     return c / jnp.maximum(jnp.sum(c, axis=-1, keepdims=True), 1e-12)
 
 
-def metropolis_mixing(contact_matrix: Array) -> Array:
+def metropolis_mixing(contacts) -> Array | SparseMixing:
     """Metropolis-Hastings weights: symmetric, doubly-stochastic on undirected
     graphs — a classic gossip baseline (beyond-paper reference point)."""
-    c = contact_matrix.astype(jnp.float32)
+    if isinstance(contacts, SparseContacts):
+        m = contacts.mask.astype(jnp.float32)
+        deg = jnp.sum(m, axis=-1) - 1.0                    # exclude self
+        deg_nbr = deg[contacts.idx]                        # [K, D] gather
+        sel = self_slots(contacts)
+        off = m * (1.0 - sel) / (1.0 + jnp.maximum(deg[:, None], deg_nbr))
+        diag = 1.0 - jnp.sum(off, axis=-1)
+        return SparseMixing(contacts.idx, off + sel * diag[:, None])
+    c = contacts.astype(jnp.float32)
     deg = jnp.sum(c, axis=-1) - 1.0  # exclude self
     off = c * (1.0 / (1.0 + jnp.maximum(deg[:, None], deg[None, :])))
     off = off * (1.0 - jnp.eye(c.shape[0]))
@@ -45,15 +74,22 @@ def metropolis_mixing(contact_matrix: Array) -> Array:
     return off + jnp.diag(diag)
 
 
-def sample_size_mixing(contact_matrix: Array, sample_counts: Array) -> Array:
+def sample_size_mixing(contacts, sample_counts: Array) -> Array | SparseMixing:
     """Decentralized-FedAvg weights [6]: proportional to neighbour sample counts."""
-    c = contact_matrix.astype(jnp.float32)
-    w = c * jnp.asarray(sample_counts, jnp.float32)[None, :]
+    counts = jnp.asarray(sample_counts, jnp.float32)
+    if isinstance(contacts, SparseContacts):
+        return _renormalize(contacts.idx, contacts.mask * counts[contacts.idx])
+    c = contacts.astype(jnp.float32)
+    w = c * counts[None, :]
     return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-12)
 
 
-def mix_params(mixing: Array, params):
+def mix_params(mixing, params):
     """Apply the gossip mix to a pytree with leading vehicle axis K.
+
+    A ``SparseMixing`` routes through the gather + slot-scan segment sum
+    (``contacts.sparse_mix_array``, O(K * D_max * P)); a dense W through the
+    tensordot below.
 
     Every leaf ``x`` of shape ``[K, ...]`` becomes the contraction
     ``W[k, j] * x[j, ...]`` over the vehicle axis — via tensordot, NOT via a
@@ -64,6 +100,9 @@ def mix_params(mixing: Array, params):
     only communication is the unavoidable vehicle-axis exchange of each
     device's own shard. Mixing is f32, cast back to the leaf dtype.
     """
+    if isinstance(mixing, SparseMixing):
+        return jax.tree_util.tree_map(lambda x: sparse_mix_array(mixing, x),
+                                      params)
 
     def mix_leaf(x: Array) -> Array:
         mixed = jnp.tensordot(mixing.astype(jnp.float32), x.astype(jnp.float32),

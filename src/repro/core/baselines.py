@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from . import aggregation, state_vector
+from . import contacts as contacts_lib
 from .dfl_dds import FederationState, LocalTrainFn, masked_update
 from .vehicle_axis import GLOBAL, VehicleSharding
 
@@ -197,14 +198,20 @@ def init_push_sum(params_stack: PyTree, num_vehicles: int) -> PushSumState:
     )
 
 
-def push_sum_mixing(contact_matrix: Array) -> Array:
+def push_sum_mixing(contacts) -> Array | contacts_lib.SparseMixing:
     """Column-stochastic mix B[k, k'] = 1/p_{k'} if k in P_{k'} (incl. self).
 
     With undirected contacts, membership is symmetric: k in P_{k'} iff
     C[k, k'] = 1. Each *column* k' sums to 1 (the sender splits its mass
     evenly over its out-neighbourhood) — the defining property of push-sum.
+    On a ``SparseContacts`` neighbour list, p is the per-row contact count
+    (same quantity by symmetry) gathered at each slot's neighbour id.
     """
-    c = contact_matrix.astype(jnp.float32)
+    if isinstance(contacts, contacts_lib.SparseContacts):
+        p = jnp.sum(contacts.mask, axis=-1)  # |P_{k'}| by symmetry
+        w = contacts.mask / jnp.maximum(p[contacts.idx], 1e-12)
+        return contacts_lib.SparseMixing(contacts.idx, w)
+    c = contacts.astype(jnp.float32)
     p = jnp.sum(c, axis=-1)  # |P_{k'}| by symmetry
     return c / jnp.maximum(p[None, :], 1e-12)
 
@@ -235,7 +242,7 @@ def sp_round(
 
     # push step: x <- B x, y <- B y
     x = mix_params_fn(mixing, ps.x)
-    y = mixing @ ps.y
+    y = contacts_lib.mix_vector(mixing, ps.y)
 
     # de-biased model and one subgradient step on x
     y_rows = shard.local_rows(y)

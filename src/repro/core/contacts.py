@@ -1,0 +1,200 @@
+"""Contact-graph representations: dense matrices vs padded neighbour lists.
+
+Vehicular contact graphs are sparse — a vehicle meets a handful of
+neighbours per epoch, not all K-1 — but the engine historically materialized
+dense ``[T, K, K]`` contact windows and mixed models with dense ``[K, K]``
+matmuls, scaling memory and compute O(K^2) per epoch. This module defines
+the *sparse* representation that replaces it on the hot path, plus the
+string-keyed **contact format registry** (``SimulationConfig.contact_format``)
+that keeps the dense path addressable as a fallback:
+
+* ``SparseContacts(idx, mask)`` — a padded neighbour list (CSR-like with a
+  uniform row width): ``idx[..., k, d]`` is the d-th neighbour of vehicle k
+  (its **own row id** on padding slots, so gathers are always in-bounds) and
+  ``mask`` marks the real contacts. Self is always a real contact
+  (``idx == row`` with ``mask == 1`` on exactly one slot per row).
+* ``SparseMixing(idx, w)`` — aggregation weights on the same slot layout:
+  ``w`` is zero on padding, each row sums to one for row-stochastic mixes.
+
+The one primitive every consumer shares is ``sparse_mix_array``: the gather
++ weighted segment-sum ``out[k] = sum_d w[k, d] * x[idx[k, d]]`` executed as
+a scan over the slot axis, so only one ``[K, P]`` gather is live at a time —
+O(K * D_max * P) compute and O(K * P) memory against the dense matmul's
+O(K^2 * P) / O(K^2).  ``aggregation``, ``state_vector`` and ``kl_solver``
+dispatch on these types, so the algorithm rounds run unchanged under either
+format.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class SparseContacts(NamedTuple):
+    """Padded neighbour lists: ``[..., K, D_max]`` ids + validity mask."""
+    idx: Array    # int32 neighbour ids; own row id on padding slots
+    mask: Array   # float32 1 = real contact, 0 = padding
+
+
+class SparseMixing(NamedTuple):
+    """Aggregation weights on a neighbour-list layout (0 on padding)."""
+    idx: Array    # int32, as in SparseContacts
+    w: Array      # float32 per-slot weights
+
+
+def num_slots(contacts: SparseContacts) -> int:
+    """D_max: the (static) neighbour-slot width."""
+    return int(contacts.idx.shape[-1])
+
+
+def _self_slots(idx: Array, valid: Array) -> Array:
+    """0/1 mask of the slot holding each row's own id (real contacts only)."""
+    k = idx.shape[-2]
+    rows = jnp.arange(k, dtype=idx.dtype).reshape((k, 1))
+    return ((idx == rows) & (valid > 0)).astype(jnp.float32)
+
+
+def self_slots(contacts: SparseContacts) -> Array:
+    """[..., K, D] 1 on the slot that is the row's own self-loop."""
+    return _self_slots(contacts.idx, contacts.mask)
+
+
+def count_edges(contacts) -> Array:
+    """Directed V2V exchanges in one contact graph: contacts minus the
+    always-on self loops. Accepts a dense ``[K, K]`` matrix or a single-epoch
+    ``SparseContacts`` — the two agree exactly (conversion is lossless)."""
+    if isinstance(contacts, SparseContacts):
+        return jnp.sum(contacts.mask) - jnp.sum(self_slots(contacts))
+    return jnp.sum(contacts) - jnp.trace(contacts)
+
+
+def sparse_mix_array(mixing: SparseMixing, x: Array) -> Array:
+    """``out[k] = sum_d w[k, d] * x[idx[k, d], ...]`` — the sparse gossip mix.
+
+    Scanned over the slot axis so peak memory is one gathered ``[K, ...]``
+    buffer, not the ``[K, D, ...]`` materialization. f32 accumulation, cast
+    back to ``x.dtype`` (mirroring the dense ``aggregation.mix_params``).
+    ``idx`` may address fewer rows than it has (the shard_map backend remaps
+    ids onto a local row block and zeroes non-owned weights).
+    """
+    w = mixing.w.astype(jnp.float32)
+
+    def step(acc, slot):
+        ids, wv = slot                       # [K], [K]
+        gathered = x[ids].astype(jnp.float32)
+        return acc + wv.reshape(wv.shape + (1,) * (x.ndim - 1)) * gathered, None
+
+    acc0 = jnp.zeros(mixing.idx.shape[:-1] + x.shape[1:], jnp.float32)
+    acc, _ = jax.lax.scan(step, acc0, (mixing.idx.T, w.T))
+    return acc.astype(x.dtype)
+
+
+def mix_vector(mixing, y: Array) -> Array:
+    """``W @ y`` for a small ``[K]`` vector under either mixing type (the
+    push-sum weight update); the dense path is the historical matvec."""
+    if isinstance(mixing, SparseMixing):
+        return jnp.sum(mixing.w * y[mixing.idx], axis=-1)
+    return mixing @ y
+
+
+def mixing_to_dense(mixing: SparseMixing, num_cols: int | None = None) -> np.ndarray:
+    """Scatter a SparseMixing back to its dense [K, K'] matrix (host-side;
+    for tests and diagnostics — duplicates on padding slots carry w=0)."""
+    idx = np.asarray(mixing.idx)
+    w = np.asarray(mixing.w)
+    k = idx.shape[0]
+    out = np.zeros((k, num_cols or k), np.float32)
+    np.add.at(out, (np.arange(k)[:, None], idx), w)
+    return out
+
+
+def pad_slots(contacts: SparseContacts, d_max: int) -> SparseContacts:
+    """Widen the slot axis to ``d_max`` (padding = own row id, mask 0) —
+    how per-seed windows with different auto-picked widths stack."""
+    idx, mask = np.asarray(contacts.idx), np.asarray(contacts.mask)
+    extra = d_max - idx.shape[-1]
+    if extra < 0:
+        raise ValueError(f"cannot shrink slot axis {idx.shape[-1]} -> {d_max}")
+    if extra == 0:
+        return SparseContacts(idx, mask)
+    k = idx.shape[-2]
+    rows = np.broadcast_to(np.arange(k, dtype=idx.dtype)[:, None],
+                           idx.shape[:-1] + (extra,))
+    return SparseContacts(
+        np.concatenate([idx, rows], axis=-1),
+        np.concatenate([mask, np.zeros_like(mask[..., :1].repeat(extra, -1))],
+                       axis=-1))
+
+
+def stack_windows(windows: list) -> Any:
+    """Stack per-seed contact windows on a leading seed axis for the
+    ``run_seeds`` vmap. Dense windows stack directly; sparse windows are
+    first padded to the widest seed's D_max."""
+    if isinstance(windows[0], SparseContacts):
+        d = max(w.idx.shape[-1] for w in windows)
+        padded = [pad_slots(w, d) for w in windows]
+        return SparseContacts(np.stack([w.idx for w in padded]),
+                              np.stack([w.mask for w in padded]))
+    return np.stack(windows)
+
+
+# --------------------------------------------------------------------------
+# contact format registry
+# --------------------------------------------------------------------------
+
+
+class ContactFormat:
+    """Protocol: how ``ContactStream`` represents a contact window on device
+    (see ``fed.engine``). ``sparse`` formats emit ``SparseContacts`` of width
+    D_max; dense formats emit the ``[T, K, K]`` matrix."""
+
+    name: str = "?"
+    sparse: bool = False
+
+
+_CONTACT_FORMATS: dict[str, ContactFormat] = {}
+
+
+def register_contact_format(cls: type[ContactFormat]) -> type[ContactFormat]:
+    """Class decorator: instantiate and register under ``cls.name``."""
+    _CONTACT_FORMATS[cls.name] = cls()
+    return cls
+
+
+def get_contact_format(name: str) -> ContactFormat:
+    try:
+        return _CONTACT_FORMATS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown contact format {name!r} "
+            f"(registered: {'|'.join(available_contact_formats())})") from None
+
+
+def available_contact_formats() -> list[str]:
+    return sorted(_CONTACT_FORMATS)
+
+
+def contact_format_registry() -> dict[str, ContactFormat]:
+    """Snapshot of the registry (name -> format), for the docs tables."""
+    return dict(_CONTACT_FORMATS)
+
+
+@register_contact_format
+class DenseContactFormat(ContactFormat):
+    """Dense [T, K, K] 0/1 contact matrices; O(K^2) memory/compute — exact at any density, the small-fleet fallback."""
+
+    name = "dense"
+    sparse = False
+
+
+@register_contact_format
+class SparseContactFormat(ContactFormat):
+    """Padded neighbour lists [T, K, D_max] (ids + weights); O(K * D_max) memory/compute — the fleet-scale default."""
+
+    name = "sparse"
+    sparse = True

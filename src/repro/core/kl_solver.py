@@ -21,6 +21,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import contacts as contacts_lib
+
 Array = jax.Array
 
 _EPS = 1e-12
@@ -96,7 +98,7 @@ def solve_p1(
 def solve_p1_all(
     states: Array,
     target: Array,
-    contact_matrix: Array,
+    contacts,
     num_steps: int = 400,
     step_size: float = 2.0,
 ) -> Array:
@@ -105,11 +107,48 @@ def solve_p1_all(
     Args:
       states: ``[K, K]`` state matrix (row k' = s_{k',t+1/2}).
       target: ``[K]``.
-      contact_matrix: ``[K, K]`` 0/1, row k = P_{k,t} (diag must be 1).
+      contacts: ``[K, K]`` 0/1 dense matrix, row k = P_{k,t} (diag must be
+        1), or a ``contacts.SparseContacts`` neighbour list.
 
     Returns:
-      ``[K, K]`` row-stochastic mixing matrix W with W[k] = alpha^k, supported
-      on the contact set.
+      Dense contacts: ``[K, K]`` alpha rows supported on the contact set.
+      Sparse contacts: ``[K, D_max]`` per-slot alpha (zero on padding) on the
+      neighbour-list layout — each vehicle's EG runs over its D_max slots
+      against the gathered ``[D_max, K]`` neighbour states (the same solver
+      body as the dense path, so the optima agree), O(K * D_max * K) per EG
+      step instead of O(K^3).
     """
     solve = partial(solve_p1, num_steps=num_steps, step_size=step_size)
-    return jax.vmap(lambda m: solve(states, target, m))(contact_matrix)
+    if isinstance(contacts, contacts_lib.SparseContacts):
+        return _solve_p1_neighbours(states, target, contacts, solve)
+    return jax.vmap(lambda m: solve(states, target, m))(contacts)
+
+
+# vehicles per block of the sparse P1 solve: the vmapped EG holds the
+# gathered neighbour states for a whole block — [block, D_max, K] floats —
+# so blocking keeps that buffer tens of MB at K=1024 instead of the full
+# [K, D_max, K] gather. Module-level so tests can shrink it to exercise the
+# blocked path at tiny K.
+P1_BLOCK = 256
+
+
+def _solve_p1_neighbours(states, target, contacts, solve) -> Array:
+    """Per-vehicle EG over the neighbour slots, in row blocks of
+    ``P1_BLOCK`` vehicles (``lax.map``). Rows padding the last block solve a
+    trivial one-slot P1 and are sliced off."""
+    idx, mask = contacts.idx, contacts.mask
+    k, d = idx.shape
+    block = min(P1_BLOCK, k)
+    num_blocks = -(-k // block)
+    pad = num_blocks * block - k
+    if pad:
+        idx = jnp.concatenate([idx, jnp.zeros((pad, d), idx.dtype)], axis=0)
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((pad, d), mask.dtype).at[:, 0].set(1)], axis=0)
+    solve_rows = jax.vmap(lambda ids, m: solve(states[ids], target, m))
+    if num_blocks == 1:
+        return solve_rows(idx, mask)[:k]
+    out = jax.lax.map(lambda b: solve_rows(*b),
+                      (idx.reshape(num_blocks, block, d),
+                       mask.reshape(num_blocks, block, d)))
+    return out.reshape(num_blocks * block, d)[:k]

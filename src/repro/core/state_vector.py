@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import contacts as contacts_lib
+
 Array = jax.Array
 
 
@@ -50,13 +52,17 @@ def normalize(state: Array, eps: float = 1e-12) -> Array:
     return jnp.where(tot > eps, state / jnp.maximum(tot, eps), state)
 
 
-def aggregate(state: Array, mixing: Array) -> Array:
+def aggregate(state: Array, mixing) -> Array:
     """Eq. (7) for all vehicles at once: ``S' = W @ S``.
 
     ``mixing[k, k']`` is alpha^k_{k'} (zero outside the contact set), each row
     summing to one, so every row of the result is the convex combination of the
-    neighbours' state vectors.
+    neighbours' state vectors. A ``contacts.SparseMixing`` applies the same
+    combination as a neighbour gather + slot sum (O(K * D_max * K), no
+    [K, K] @ [K, K] matmul).
     """
+    if isinstance(mixing, contacts_lib.SparseMixing):
+        return contacts_lib.sparse_mix_array(mixing, state)
     return mixing @ state
 
 

@@ -31,6 +31,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from . import contacts as contacts_lib
+
 Array = jax.Array
 PyTree = Any
 
@@ -99,13 +101,29 @@ def sharded_mix(base_mix_fn: MixParamsFn, shard: VehicleSharding) -> MixParamsFn
     both ``aggregation.mix_params`` (tensordot) and the Pallas
     ``mix_params_pallas`` do. In the global regime the base fn is returned
     untouched, so the vmap backend's numerics are bit-identical to before.
+
+    A ``contacts.SparseMixing`` shards the same way by *source*: the
+    replicated [K, D_max] neighbour list is remapped onto this shard's local
+    row block (ids outside the block are clipped in-bounds and their weights
+    zeroed), the base fn's local gather produces the [K, ...] partial sums
+    over the sources this shard owns, and the identical tiled psum_scatter
+    completes the sum while dealing each shard its own output rows.
     """
     if not shard.is_sharded:
         return base_mix_fn
 
-    def mix(mixing: Array, params: PyTree) -> PyTree:
-        cols = shard.local_cols(mixing)          # [K, K_local]
-        partial = base_mix_fn(cols, params)      # [K, ...] partial sums
+    def mix(mixing, params: PyTree) -> PyTree:
+        if isinstance(mixing, contacts_lib.SparseMixing):
+            k_local = jax.tree_util.tree_leaves(params)[0].shape[0]
+            start = jax.lax.axis_index(shard.axis_name) * k_local
+            loc = mixing.idx - start
+            owned = (loc >= 0) & (loc < k_local)
+            mixing = contacts_lib.SparseMixing(
+                jnp.clip(loc, 0, k_local - 1).astype(mixing.idx.dtype),
+                jnp.where(owned, mixing.w, 0.0))
+        else:
+            mixing = shard.local_cols(mixing)    # [K, K_local]
+        partial = base_mix_fn(mixing, params)    # [K, ...] partial sums
         return jax.tree_util.tree_map(
             lambda t: jax.lax.psum_scatter(
                 t, shard.axis_name, scatter_dimension=0, tiled=True),

@@ -10,9 +10,10 @@ from .base import Algorithm, AlgorithmSetup, federation_state_pspec, register_al
 
 @register_algorithm
 class DFedAvg(Algorithm):
-    """E local iterations FIRST, then the sample-size-weighted gossip
-    average (core.baselines.d_fedavg_round) — the DFedAvg ordering, vs
-    ``dfl``'s aggregate-then-train."""
+    """Train-then-aggregate decentralized FedAvg (the DFedAvg ordering).
+
+    E local iterations FIRST, then the sample-size-weighted gossip average
+    (core.baselines.d_fedavg_round) — vs ``dfl``'s aggregate-then-train."""
 
     name = "d_fedavg"
 

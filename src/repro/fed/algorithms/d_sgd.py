@@ -8,9 +8,11 @@ from .base import Algorithm, AlgorithmSetup, federation_state_pspec, register_al
 
 @register_algorithm
 class DSGD(Algorithm):
-    """D-PSGD-style consensus: mix with the symmetric, doubly stochastic
-    Metropolis-Hastings matrix (aggregation.metropolis_mixing), then E local
-    iterations (core.baselines.d_sgd_round)."""
+    """D-PSGD-style gossip SGD with Metropolis-Hastings consensus weights.
+
+    Mix with the symmetric, doubly stochastic Metropolis matrix
+    (aggregation.metropolis_mixing), then E local iterations
+    (core.baselines.d_sgd_round)."""
 
     name = "d_sgd"
 

@@ -7,8 +7,10 @@ from .base import Algorithm, AlgorithmSetup, federation_state_pspec, register_al
 
 @register_algorithm
 class DDS(Algorithm):
-    """State-vector-guided aggregation: per-round P1 solve -> gossip mix ->
-    E local iterations -> state-vector update (core.dfl_dds.dds_round)."""
+    """The paper's DFL-DDS: P1-solved diversity-aware aggregation weights.
+
+    Per round: solve P1 on the exchanged state vectors -> gossip mix -> E
+    local iterations -> state-vector update (core.dfl_dds.dds_round)."""
 
     name = "dds"
 

@@ -9,9 +9,11 @@ from .base import Algorithm, AlgorithmSetup, federation_state_pspec, register_al
 
 @register_algorithm
 class DFL(Algorithm):
-    """Aggregate-then-train with sample-size-proportional weights
-    (core.baselines.dfl_round). Sample counts are read from the round's
-    ``fed_data`` argument so per-seed counts resolve under the seed vmap."""
+    """Decentralized FedAvg [6]: sample-size-proportional gossip weights.
+
+    Aggregate-then-train (core.baselines.dfl_round); sample counts are read
+    from the round's ``fed_data`` argument so per-seed counts resolve under
+    the seed vmap."""
 
     name = "dfl"
 

@@ -14,8 +14,9 @@ FULL_BATCH_CAP = 256
 
 @register_algorithm
 class SP(Algorithm):
-    """Push-sum gossip + one full-local-set subgradient step per epoch
-    (core.baselines.sp_round); evaluation de-biases by the push-sum weights
+    """Subgradient-push [5]: push-sum gossip + one full-set step per epoch.
+
+    core.baselines.sp_round; evaluation de-biases by the push-sum weights
     (z = x / y)."""
 
     name = "sp"

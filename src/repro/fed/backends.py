@@ -29,6 +29,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from ..core import contacts as contacts_lib
 from ..core.vehicle_axis import VehicleSharding
 from ..data import datasets as data_lib
 from ..data import pipeline
@@ -70,6 +71,11 @@ def available_backends() -> list[str]:
     return sorted(_BACKENDS)
 
 
+def backend_registry() -> dict[str, Backend]:
+    """Snapshot of the registry (name -> instance), for the docs tables."""
+    return dict(_BACKENDS)
+
+
 def _drive_windows(ctx, window_fn, progress: bool):
     """The shared window-driving loop: advance the contact stream, scan each
     window through ``window_fn`` (a jitted window callable), and collect the
@@ -82,7 +88,8 @@ def _drive_windows(ctx, window_fn, progress: bool):
     state, rng = ctx.init_state, ctx.init_rng
     for start in range(0, cfg.epochs, window_size):
         length = min(window_size, cfg.epochs - start)
-        contacts = jnp.asarray(ctx.contacts.window(length))
+        contacts = jax.tree_util.tree_map(jnp.asarray,
+                                          ctx.contacts.window(length))
         mask = engine_lib._eval_mask(cfg, start, length)
         state, rng, traj = window_fn(
             state, rng, ctx.fed_data, ctx.target, contacts, jnp.asarray(mask))
@@ -109,12 +116,14 @@ _SEED_WINDOW_CACHE_MAX = 8
 # drive host-side work), so two configs differing only here may share a
 # compiled program. Everything NOT listed lands in the cache key — a new
 # SimulationConfig field is conservatively assumed trace-baked, costing a
-# recompile rather than risking stale-program reuse. (mix_params_fn is
-# special-cased: a bare callable can't be keyed, so it bypasses the cache.)
+# recompile rather than risking stale-program reuse. (contact_format and
+# the d_max knobs stay in the key: they change the traced contact shapes;
+# jax.jit additionally retraces per concrete shape, so scenarios with
+# different auto-picked D_max coexist safely under one cache entry.)
 _ARGUMENT_ONLY_FIELDS = frozenset({
     "road_net", "distribution", "mobility", "seed", "epochs", "eval_every",
     "comm_range", "epoch_duration", "p_drop",
-    "use_scan_engine", "window_size", "backend", "mix_params_fn",
+    "use_scan_engine", "window_size", "backend",
 })
 
 
@@ -152,10 +161,8 @@ class VmapBackend(Backend):
         rngs = jnp.stack([c.init_rng for c in ctxs])
         targets = jnp.stack([c.target for c in ctxs])
 
-        # the deprecated mix_params_fn callable can't be keyed — skip the cache
-        cache_key = (_seed_window_key(cfg, ds, len(seeds),
-                                      fed_stack.index_table.shape)
-                     if cfg.mix_params_fn is None else None)
+        cache_key = _seed_window_key(cfg, ds, len(seeds),
+                                     fed_stack.index_table.shape)
         # entries pin the dataset object so its id() (part of the key) can't
         # be recycled onto a different dataset while the entry lives
         hit = _SEED_WINDOW_CACHE.get(cache_key)
@@ -164,17 +171,18 @@ class VmapBackend(Backend):
             window_vmap = jax.jit(jax.vmap(
                 engine_lib.build_window_fn(ctxs[0]),
                 in_axes=(0, 0, pipeline.FederatedData(None, None, 0, 0), 0, 0, None)))
-            if cache_key is not None:
-                if len(_SEED_WINDOW_CACHE) >= _SEED_WINDOW_CACHE_MAX:
-                    _SEED_WINDOW_CACHE.pop(next(iter(_SEED_WINDOW_CACHE)))
-                _SEED_WINDOW_CACHE[cache_key] = (window_vmap, ds)
+            if len(_SEED_WINDOW_CACHE) >= _SEED_WINDOW_CACHE_MAX:
+                _SEED_WINDOW_CACHE.pop(next(iter(_SEED_WINDOW_CACHE)))
+            _SEED_WINDOW_CACHE[cache_key] = (window_vmap, ds)
 
         results = [engine_lib.SimulationResult(config=c.cfg) for c in ctxs]
         window_size = engine_lib._default_window(cfg, progress)
         for start in range(0, cfg.epochs, window_size):
             length = min(window_size, cfg.epochs - start)
-            contacts = jnp.asarray(
-                np.stack([c.contacts.window(length) for c in ctxs]))
+            # per-seed windows stack on a leading seed axis; sparse windows
+            # are padded to the widest seed's auto-picked D_max first
+            contacts = jax.tree_util.tree_map(jnp.asarray, contacts_lib.stack_windows(
+                [c.contacts.window(length) for c in ctxs]))
             mask = engine_lib._eval_mask(cfg, start, length)
             states, rngs, traj = window_vmap(states, rngs, fed_stack, targets,
                                              contacts, jnp.asarray(mask))
@@ -225,6 +233,10 @@ class ShardMapBackend(Backend):
 
         state_spec = ctx.algorithm.state_pspec(sctx.setup, "vehicle")
         data_spec = pipeline.FederatedData(P(), P(), P(), P())
+        # contact windows are replicated on every shard in either format
+        # (the mixing remaps them per shard; see vehicle_axis.sharded_mix)
+        contact_spec = (contacts_lib.SparseContacts(P(), P())
+                        if ctx.contacts.format.sparse else P())
         traj_spec = {
             "accuracy": P(None, "vehicle"),   # [T, K] rows reassemble
             "consensus": P(),
@@ -236,7 +248,7 @@ class ShardMapBackend(Backend):
         }
         window = shard_map(
             engine_lib.build_window_fn(sctx), mesh=mesh,
-            in_specs=(state_spec, P(), data_spec, P(), P(), P()),
+            in_specs=(state_spec, P(), data_spec, P(), contact_spec, P()),
             out_specs=(state_spec, P(), traj_spec),
             check_rep=False)
         ctx._jit_cache["shard_window"] = jax.jit(window)

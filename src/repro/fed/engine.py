@@ -8,10 +8,13 @@ ran strictly serially. This module restructures the hot path:
 * **Contact-window precompute** — the Manhattan mobility process stays
   host-side (it is inherently sequential) but is batched up front:
   ``ContactStream.window(T)`` advances T epochs of motion and converts the
-  stacked [T, K, 2] position snapshots into one [T, K, K] contact tensor
-  (``topology.contact_matrices`` + ``extensions.contact_window``), including
-  RSU relays and Bernoulli edge drops. The stream consumes its RNGs epoch by
-  epoch, so trajectories are independent of window chunking.
+  stacked [T, K, 2] position snapshots into the contact representation the
+  run's ``contact_format`` names (core.contacts registry): padded
+  neighbour lists [T, K, D_max] (the sparse, fleet-scale default) or the
+  dense [T, K, K] contact tensor (``topology`` + ``extensions`` helpers) —
+  including RSU relays and Bernoulli edge drops either way. The stream
+  consumes its RNGs epoch by epoch, so trajectories are independent of
+  window chunking AND of the contact format.
 
 * **Scanned round** — ``lax.scan`` runs the whole window on device: per step
   it folds fresh PRNG keys off the scan carry, gathers per-vehicle
@@ -34,7 +37,6 @@ identical eval trajectories).
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import Any, Callable
@@ -44,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import aggregation, state_vector, vehicle_axis
+from ..core import contacts as contacts_lib
 from ..data import datasets as data_lib
 from ..data import pipeline
 from ..kernels.gossip_mix import ops as gossip_ops
@@ -77,13 +80,22 @@ class SimulationConfig:
     p1_step_size: float = 2.0
     seed: int = 0
     mobility: str = "manhattan"       # any registered mobility model (fed.mobility)
+    # contact-window representation (core.contacts registry): "sparse" packs
+    # each epoch's graph into padded neighbour lists [T, K, D_max] — O(K *
+    # D_max) memory/compute, the fleet-scale default; "dense" keeps the
+    # [T, K, K] matrices. Trajectories are format-independent (parity-tested
+    # to tolerance). See docs/SCALING.md.
+    contact_format: str = "sparse"
+    # neighbour-slot budget for the sparse format: d_max pins the slot count
+    # directly; contact_density sizes it as a fleet fraction (ceil(density *
+    # K)); with both unset, a probe replays the exact contact stream and
+    # picks the run's true maximum contact-set size (no overflow possible).
+    # Overflowing an explicit budget is a loud error, never a truncation.
+    d_max: int = 0
+    contact_density: float | None = None
     # how the gossip mix W @ w executes: "jnp" (tensordot reference, the CPU
-    # default) | "pallas" (the gossip_mix TPU kernel; jnp fallback off-TPU)
+    # default) | "pallas" (the gossip_mix TPU kernels; jnp fallback off-TPU)
     mixing_backend: str = "jnp"
-    # DEPRECATED: pass mixing_backend instead. A bare callable here broke
-    # dataclass equality/replace ergonomics; honored (with a warning) for one
-    # release.
-    mix_params_fn: Callable | None = None
     # extensions (paper Sec. V-C / Sec. VII): data-less static RSUs join the
     # federation as relays; V2V exchanges fail with probability p_drop
     num_rsus: int = 0
@@ -101,14 +113,12 @@ class SimulationConfig:
 
 
 def resolve_mix_params_fn(cfg: SimulationConfig) -> Callable:
-    """The gossip-mix implementation for this run: the deprecated explicit
-    callable if set, else the ``mixing_backend`` string knob."""
-    if cfg.mix_params_fn is not None:
-        warnings.warn(
-            "SimulationConfig.mix_params_fn is deprecated; use "
-            "mixing_backend='jnp'|'pallas' (or register a backend) instead.",
-            DeprecationWarning, stacklevel=3)
-        return cfg.mix_params_fn
+    """The gossip-mix implementation named by the ``mixing_backend`` knob.
+
+    (The deprecated ``SimulationConfig.mix_params_fn`` callable field is
+    REMOVED — it broke dataclass equality and defeated the compiled-window
+    and campaign caches; register an execution backend or pass
+    ``mixing_backend`` instead.)"""
     if cfg.mixing_backend == "jnp":
         return aggregation.mix_params
     if cfg.mixing_backend == "pallas":
@@ -187,13 +197,56 @@ def _partition(ds, cfg: SimulationConfig):
     return idx
 
 
+def probe_d_max(cfg: SimulationConfig, net: topology_lib.RoadNetwork,
+                chunk: int = 0) -> int:
+    """The exact neighbour-slot demand of a run: replay the (deterministic,
+    seeded) contact stream over the full horizon and return the largest
+    contact-set size (incl. self) any participant ever sees.
+
+    Mobility / drop streams are clones of the real run's, so an auto-probed
+    ``D_max`` can never overflow. Host cost is the same O(T * K^2) distance
+    precompute the dense path pays per window, chunked so the transient
+    probe buffer stays ~16 MB at any fleet size (the whole point of the
+    sparse format is never holding O(T * K^2)); for very long large-K runs
+    pin ``cfg.d_max`` / ``cfg.contact_density`` instead to skip the probe
+    (see docs/SCALING.md).
+    """
+    mob = mobility_lib.make_mobility(
+        cfg.mobility, net, mobility_lib.MobilityConfig(
+            num_vehicles=cfg.num_vehicles, epoch_duration=cfg.epoch_duration,
+            comm_range=cfg.comm_range, seed=cfg.seed))
+    rsu_pos = (extensions_lib.place_rsus(net, cfg.num_rsus, seed=cfg.seed)
+               if cfg.num_rsus else None)
+    drop_rng = np.random.default_rng(cfg.seed + 7)
+    if chunk <= 0:
+        total = cfg.num_vehicles + cfg.num_rsus
+        chunk = max(1, min(64, (16 << 20) // (4 * total * total)))
+    d_max, remaining = 1, cfg.epochs
+    while remaining > 0:
+        t = min(chunk, remaining)
+        remaining -= t
+        dense = extensions_lib.contact_window(
+            mob.advance_positions(t), rsu_pos, cfg.comm_range, cfg.p_drop,
+            drop_rng)
+        d_max = max(d_max, topology_lib.max_contact_degree(dense))
+    return d_max
+
+
 class ContactStream:
     """Host-side mobility -> batched contact windows.
 
     ``window(T)`` advances the Manhattan process T epochs and returns the
-    [T, Ktot, Ktot] contact tensor (RSU columns appended, dropped edges
-    removed). Both RNG streams (mobility, drops) advance one epoch at a
-    time, so ``window(a); window(b)`` equals ``window(a + b)`` row for row.
+    window in the representation named by ``cfg.contact_format``
+    (core.contacts registry): the dense [T, Ktot, Ktot] contact tensor, or
+    ``SparseContacts`` neighbour lists [T, Ktot, D_max] built one epoch at a
+    time (RSU columns appended, dropped edges removed in both). Both RNG
+    streams (mobility, drops) advance one epoch at a time, so ``window(a);
+    window(b)`` equals ``window(a + b)`` row for row, and sparse windows see
+    the same dropped edges as dense ones.
+
+    For the sparse format, ``d_max`` is resolved once at construction:
+    ``cfg.d_max`` if pinned, else ``ceil(contact_density * Ktot)``, else the
+    exact full-horizon probe (``probe_d_max``).
     """
 
     def __init__(self, cfg: SimulationConfig, net: topology_lib.RoadNetwork):
@@ -205,9 +258,25 @@ class ContactStream:
         self.rsu_pos = (extensions_lib.place_rsus(net, cfg.num_rsus, seed=cfg.seed)
                         if cfg.num_rsus else None)
         self.drop_rng = np.random.default_rng(cfg.seed + 7)
+        self.format = contacts_lib.get_contact_format(cfg.contact_format)
+        self.d_max = self._resolve_d_max(net) if self.format.sparse else 0
 
-    def window(self, num_epochs: int) -> np.ndarray:
+    def _resolve_d_max(self, net: topology_lib.RoadNetwork) -> int:
+        total = self.cfg.num_vehicles + self.cfg.num_rsus
+        if self.cfg.d_max > 0:
+            return min(self.cfg.d_max, total)
+        if self.cfg.contact_density is not None:
+            return max(1, min(total, int(np.ceil(
+                self.cfg.contact_density * total))))
+        return probe_d_max(self.cfg, net)
+
+    def window(self, num_epochs: int):
         positions = self.mob.advance_positions(num_epochs)
+        if self.format.sparse:
+            idx, mask = extensions_lib.neighbour_window(
+                positions, self.rsu_pos, self.cfg.comm_range, self.cfg.p_drop,
+                self.drop_rng, self.d_max)
+            return contacts_lib.SparseContacts(idx, mask)
         return extensions_lib.contact_window(
             positions, self.rsu_pos, self.cfg.comm_range, self.cfg.p_drop,
             self.drop_rng)
@@ -338,7 +407,8 @@ def build_context(cfg: SimulationConfig, dataset=None) -> EngineContext:
 
 
 def build_window_fn(ctx: EngineContext) -> Callable:
-    """The fused window: scan the algorithm round over [T, K, K] contacts.
+    """The fused window: scan the algorithm round over the window's contact
+    graphs — dense [T, K, K] matrices or [T, K, D_max] neighbour lists.
 
     Returns ``window(state, rng, fed_data, target, contacts, eval_mask) ->
     (state, rng, traj)`` where ``traj`` stacks per-epoch diagnostics;
@@ -371,8 +441,9 @@ def build_window_fn(ctx: EngineContext) -> Callable:
             st, diags = round_fn(st, contacts_t, target, batch, kr, fed_data)
             accs, consensus = jax.lax.cond(do_eval, evaluate, skip, st)
             # directed V2V exchanges this round: contact edges minus the
-            # always-on self loops (contacts are replicated on every shard)
-            edges = jnp.sum(contacts_t) - jnp.trace(contacts_t)
+            # always-on self loops (contacts are replicated on every shard;
+            # the dense matrix and the neighbour list count identically)
+            edges = contacts_lib.count_edges(contacts_t)
             out = {
                 "accuracy": accs,
                 "consensus": consensus,

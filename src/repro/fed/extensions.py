@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from .topology import RoadNetwork, contact_matrices, contact_matrix
+from .topology import (RoadNetwork, contact_matrices, contact_matrix,
+                       neighbour_lists)
 
 
 def place_rsus(net: RoadNetwork, num_rsus: int, seed: int = 0) -> np.ndarray:
@@ -78,3 +79,31 @@ def contact_window(positions: np.ndarray, rsu_positions: np.ndarray | None,
         positions = np.concatenate([positions, rsus], axis=1)
     contacts = contact_matrices(positions, comm_range)
     return drop_contacts_window(contacts, p_drop, drop_rng)
+
+
+def neighbour_window(positions: np.ndarray, rsu_positions: np.ndarray | None,
+                     comm_range: float, p_drop: float,
+                     drop_rng: np.random.Generator,
+                     d_max: int) -> tuple[np.ndarray, np.ndarray]:
+    """``contact_window`` emitted as padded neighbour lists ``(idx, mask)``
+    of shape ``[T, K(+R), d_max]`` — the sparse contact format's host-side
+    precompute.
+
+    Built one epoch at a time so peak host memory is one ``[K, K]`` matrix
+    plus the ``[T, K, d_max]`` output, never the dense ``[T, K, K]`` window.
+    The drop RNG is consumed epoch by epoch (``drop_contacts_window`` on
+    [1, K, K] slices), so sparse and dense streams with the same seed see
+    the *same* dropped edges and trajectories stay format-independent.
+    Overflowing ``d_max`` raises (see ``topology.neighbour_lists``).
+    """
+    t = positions.shape[0]
+    k = positions.shape[1] + (len(rsu_positions) if rsu_positions is not None
+                              else 0)
+    d_max = min(int(d_max), k)
+    idx = np.empty((t, k, d_max), np.int32)
+    mask = np.empty((t, k, d_max), np.float32)
+    for e in range(t):
+        dense = contact_window(positions[e:e + 1], rsu_positions, comm_range,
+                               p_drop, drop_rng)
+        idx[e], mask[e] = neighbour_lists(dense[0], d_max)
+    return idx, mask

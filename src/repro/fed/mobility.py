@@ -45,6 +45,11 @@ def available_mobility_models() -> list[str]:
     return sorted(_MOBILITY_MODELS)
 
 
+def mobility_registry() -> dict[str, Callable]:
+    """Snapshot of the registry (name -> factory), for the docs tables."""
+    return dict(_MOBILITY_MODELS)
+
+
 def make_mobility(name: str, net: RoadNetwork, cfg: "MobilityConfig"):
     """Build a registered mobility process by name."""
     try:
@@ -68,8 +73,10 @@ class MobilityConfig:
 
 @register_mobility("manhattan")
 class ManhattanMobility:
-    """Stateful vehicle mobility process. ``step()`` advances one epoch and
-    returns the [K, K] contact matrix at the snapshot."""
+    """Paper Manhattan mobility: straight 0.5 / left 0.25 / right 0.25 turns.
+
+    Stateful process; ``advance_positions(T)`` yields the engine's [T, K, 2]
+    snapshots, ``step()`` one epoch's [K, K] contact matrix."""
 
     def __init__(self, net: RoadNetwork, cfg: MobilityConfig):
         self.net = net

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import aggregation
+from ..core import contacts as contacts_lib
 from . import engine as engine_lib
 # re-exports: the public simulation API lives here for backwards
 # compatibility; definitions moved to engine.py with the fused-engine
@@ -49,14 +50,17 @@ def run_legacy_loop(ctx: EngineContext, progress: bool = False) -> SimulationRes
     payload_mb = engine_lib.exchange_payload_mb(ctx)
 
     for epoch in range(cfg.epochs):
-        contacts = jnp.asarray(ctx.contacts.window(1)[0])
+        # one epoch of the contact stream, in the run's contact format
+        # (dense [K, K] matrix or single-epoch SparseContacts)
+        contacts = jax.tree_util.tree_map(lambda x: jnp.asarray(x[0]),
+                                          ctx.contacts.window(1))
         rng, kb, kr = jax.random.split(rng, 3)
         batch = ctx.sample_fn(ctx.fed_data, kb)
         state, diags = round_fn(state, contacts, ctx.target, batch, kr,
                                 ctx.fed_data)
-        c = np.asarray(contacts)
         result.kl_trace.append(float(np.mean(np.asarray(diags["kl_divergence"]))))
-        result.comm_mb.append(float(c.sum() - np.trace(c)) * payload_mb)
+        result.comm_mb.append(
+            float(np.asarray(contacts_lib.count_edges(contacts))) * payload_mb)
         if (epoch + 1) % cfg.eval_every == 0 or epoch == cfg.epochs - 1:
             _record(result, epoch, ctx.model_of(state), diags, eval_all,
                     progress, num_vehicles=cfg.num_vehicles)

@@ -181,11 +181,38 @@ def highway_net(num_interchanges: int = 25, segment: float = 250.0,
 
 
 # paper nets (Sec. VI-A.3) + beyond-paper scenarios; only `random` consumes
-# the seed — the others are deterministic layouts
-register_road_network("grid")(lambda seed=0: grid_net())
-register_road_network("random")(lambda seed=0: random_net(seed=seed))
-register_road_network("spider")(lambda seed=0: spider_net())
-register_road_network("highway")(lambda seed=0: highway_net())
+# the seed — the others are deterministic layouts. Named factories (not
+# lambdas) so the registry docs tables (repro.registries) can surface each
+# entry's one-line summary.
+
+
+@register_road_network("grid")
+def registered_grid(seed: int = 0) -> RoadNetwork:
+    """Paper 10x10 Manhattan grid, 100 m spacing (Sec. VI-A.3)."""
+    return grid_net()
+
+
+@register_road_network("random")
+def registered_random(seed: int = 0) -> RoadNetwork:
+    """Paper random-growth net: 100 junctions, degrees 1..5, seeded."""
+    return random_net(seed=seed)
+
+
+@register_road_network("spider")
+def registered_spider(seed: int = 0) -> RoadNetwork:
+    """Paper spider web: 10 radial arms x 10 concentric rings."""
+    return spider_net()
+
+
+@register_road_network("highway")
+def registered_highway(seed: int = 0) -> RoadNetwork:
+    """Beyond-paper corridor: main + frontage roads, near-chain contacts."""
+    return highway_net()
+
+
+def road_network_registry() -> dict[str, Callable[..., RoadNetwork]]:
+    """Snapshot of the registry (name -> factory), for the docs tables."""
+    return dict(_ROAD_NETWORKS)
 
 
 def make_road_network(name: str, seed: int = 0) -> RoadNetwork:
@@ -215,3 +242,53 @@ def contact_matrices(positions: np.ndarray, comm_range: float = 100.0) -> np.nda
     k = c.shape[-1]
     c[:, np.arange(k), np.arange(k)] = 1.0
     return c
+
+
+def max_contact_degree(contacts: np.ndarray) -> int:
+    """Largest contact-set size (including self) over a dense [..., K, K]
+    window — the exact neighbour-slot demand of its sparse conversion."""
+    return int(contacts.sum(axis=-1).max())
+
+
+def neighbour_lists(contacts: np.ndarray, d_max: int) -> tuple[np.ndarray, np.ndarray]:
+    """Dense 0/1 contacts ``[..., K, K]`` -> padded neighbour lists
+    ``(idx, mask)`` of shape ``[..., K, min(d_max, K)]``.
+
+    Per row, real contacts land first in ascending neighbour-id order
+    (stable argsort), then padding slots carrying the row's OWN id with mask
+    0 — so gathers through padding are in-bounds no-ops. Raises a loud
+    ``ValueError`` when any row holds more contacts than slots: silent
+    truncation would change trajectories, so overflow is an error and the
+    fix is a bigger ``d_max`` / ``contact_density`` (or the auto probe,
+    which sizes D_max from the exact contact stream).
+    """
+    k = contacts.shape[-1]
+    d_max = min(int(d_max), k)
+    deg = contacts.sum(axis=-1)
+    if deg.max() > d_max:
+        where = np.unravel_index(int(deg.argmax()), deg.shape)
+        raise ValueError(
+            f"neighbour-list overflow: contact set of size {int(deg.max())} "
+            f"at index {where} exceeds d_max={d_max} slots; raise "
+            f"SimulationConfig.d_max / contact_density (or leave both unset "
+            f"for the exact auto probe) instead of truncating contacts")
+    # stable argsort of -contacts: real contacts (value 1) first, each group
+    # in ascending neighbour-id order
+    order = np.argsort(-contacts, axis=-1, kind="stable")[..., :d_max]
+    mask = np.take_along_axis(contacts, order, axis=-1) > 0
+    rows = np.arange(k).reshape((1,) * (contacts.ndim - 2) + (k, 1))
+    idx = np.where(mask, order, rows)
+    return idx.astype(np.int32), mask.astype(np.float32)
+
+
+def dense_from_neighbours(idx: np.ndarray, mask: np.ndarray,
+                          num_cols: int | None = None) -> np.ndarray:
+    """Invert ``neighbour_lists``: scatter ``[..., K, D]`` lists back to the
+    dense ``[..., K, K]`` 0/1 matrix (padding slots scatter zeros)."""
+    k = idx.shape[-2]
+    out = np.zeros(idx.shape[:-1] + (num_cols or k,), np.float32)
+    flat = out.reshape(-1, out.shape[-1])
+    np.add.at(flat, (np.arange(flat.shape[0])[:, None],
+                     idx.reshape(-1, idx.shape[-1]).astype(np.int64)),
+              mask.reshape(-1, mask.shape[-1]).astype(np.float32))
+    return np.minimum(flat.reshape(out.shape), 1.0)

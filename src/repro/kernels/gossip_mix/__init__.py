@@ -1,5 +1,6 @@
-from .kernel import gossip_mix_matmul
+from .kernel import gossip_mix_gather, gossip_mix_matmul
 from .ops import mix_params_pallas
-from .ref import gossip_mix_matmul_ref
+from .ref import gossip_mix_gather_ref, gossip_mix_matmul_ref
 
-__all__ = ["gossip_mix_matmul", "mix_params_pallas", "gossip_mix_matmul_ref"]
+__all__ = ["gossip_mix_matmul", "gossip_mix_gather", "mix_params_pallas",
+           "gossip_mix_matmul_ref", "gossip_mix_gather_ref"]

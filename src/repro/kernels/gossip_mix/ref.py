@@ -10,3 +10,15 @@ def gossip_mix_matmul_ref(mixing: jax.Array, flat: jax.Array) -> jax.Array:
                      flat.astype(jnp.float32),
                      precision=jax.lax.Precision.HIGHEST)
     return out.astype(flat.dtype)
+
+
+def gossip_mix_gather_ref(idx: jax.Array, w: jax.Array,
+                          flat: jax.Array) -> jax.Array:
+    """Oracle for the sparse (neighbour-list) kernel: ``out[k] = sum_d
+    w[k, d] * flat[idx[k, d]]``. Materializes the [K, D, P] gather — fine
+    as a correctness reference, not the memory-safe production path (that
+    is ``core.contacts.sparse_mix_array``'s slot scan)."""
+    gathered = flat[idx].astype(jnp.float32)             # [K, D, P]
+    out = jnp.einsum("kd,kdp->kp", w.astype(jnp.float32), gathered,
+                     precision=jax.lax.Precision.HIGHEST)
+    return out.astype(flat.dtype)

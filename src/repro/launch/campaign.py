@@ -47,12 +47,15 @@ from .results_store import ResultsStore, jsonable
 # varies; everything else comes from the campaign's base config (scale tier)
 Key = tuple[str, str, str, str]
 
-# config fields that do NOT change trajectories (parity-tested across
-# execution paths in tests/test_backends.py / test_engine.py) — excluded
+# config fields that do NOT change trajectories beyond float summation
+# order (parity-tested to ~1e-5/step across execution paths and contact
+# formats in tests/test_backends.py / test_engine.py / test_contacts.py;
+# long chaotic training runs can drift further, which is equally true of
+# backend/mixing_backend and is why checks carry tolerances) — excluded
 # from the content hash, recorded in the row's `engine` section instead
 NON_SEMANTIC_FIELDS = frozenset({
     "use_scan_engine", "window_size", "backend", "mixing_backend",
-    "mix_params_fn",
+    "contact_format", "d_max", "contact_density",
 })
 
 
@@ -114,6 +117,11 @@ def available_figures() -> list[str]:
     return sorted(_FIGURES)
 
 
+def figure_registry() -> dict[str, FigureSpec]:
+    """Snapshot of the registry (name -> spec), for the docs tables."""
+    return dict(_FIGURES)
+
+
 @dataclass
 class CampaignSpec:
     """A figure set run over shared seeds at one scale tier (``base``)."""
@@ -152,17 +160,8 @@ def dataset_signature(ds) -> list:
 
 
 def spec_hash(cfg: SimulationConfig, seeds: Sequence[int], ds_sig: list) -> str:
-    """Content hash of everything that determines the trajectories.
-
-    The excluded execution knobs are parity-tested trajectory-neutral —
-    EXCEPT the deprecated ``mix_params_fn`` callable, which can change
-    trajectories arbitrarily and cannot be content-keyed, so campaigns
-    refuse it outright (pass ``mixing_backend`` instead)."""
-    if cfg.mix_params_fn is not None:
-        raise ValueError(
-            "campaigns cannot cache runs keyed by the deprecated "
-            "SimulationConfig.mix_params_fn callable; use "
-            "mixing_backend='jnp'|'pallas' instead")
+    """Content hash of everything that determines the trajectories; the
+    excluded execution knobs are parity-tested trajectory-neutral."""
     semantic = {f.name: getattr(cfg, f.name) for f in fields(cfg)
                 if f.name not in NON_SEMANTIC_FIELDS}
     payload = {"config": semantic, "seeds": [int(s) for s in seeds],
@@ -183,6 +182,7 @@ def scenario_row(key: Key, cfg: SimulationConfig, seeds: Sequence[int],
         "key": list(key),
         "config": semantic,
         "engine": {"backend": cfg.backend, "mixing_backend": cfg.mixing_backend,
+                   "contact_format": cfg.contact_format,
                    "path": "run_sweep/run_seeds"},
         "dataset_sig": ds_sig,
         "seeds": [int(s) for s in seeds],

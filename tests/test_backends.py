@@ -13,7 +13,6 @@ that multi-device path exercised even in the single-device suite.
 import os
 import subprocess
 import sys
-import warnings
 from dataclasses import replace
 
 import jax
@@ -117,11 +116,11 @@ def test_register_new_algorithm_reaches_engine(tiny_ds):
 
 
 # ---------------------------------------------------------------------------
-# config ergonomics (mixing_backend knob + deprecation shim)
+# config ergonomics (mixing_backend knob; mix_params_fn field is REMOVED)
 
 
 def test_config_equality_and_replace():
-    # the bare-callable default used to break dataclass equality
+    # the bare-callable field used to break dataclass equality
     assert SimulationConfig() == SimulationConfig()
     assert replace(SimulationConfig(), epochs=7).epochs == 7
 
@@ -134,19 +133,16 @@ def test_mixing_backend_resolution():
         SimulationConfig(mixing_backend="pallas")) is mix_params_pallas
 
 
-def test_mix_params_fn_shim_warns_and_runs(tiny_ds):
-    cfg = _tiny_cfg(epochs=2, eval_every=2,
-                    mix_params_fn=aggregation.mix_params)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        res = run_simulation(cfg, dataset=tiny_ds)
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    base = run_simulation(_tiny_cfg(epochs=2, eval_every=2), dataset=tiny_ds)
-    np.testing.assert_allclose(res.avg_accuracy, base.avg_accuracy, atol=1e-6)
+def test_mix_params_fn_field_is_removed():
+    """The PR-2 deprecation shim is gone: pass mixing_backend (or register a
+    backend) — a callable config field can't key any of the caches."""
+    with pytest.raises(TypeError):
+        SimulationConfig(mix_params_fn=aggregation.mix_params)
 
 
-def test_pallas_mixing_backend_matches_jnp(tiny_ds):
-    cfg = _tiny_cfg(epochs=3, eval_every=3)
+@pytest.mark.parametrize("contact_format", ["dense", "sparse"])
+def test_pallas_mixing_backend_matches_jnp(tiny_ds, contact_format):
+    cfg = _tiny_cfg(epochs=3, eval_every=3, contact_format=contact_format)
     jnp_res = run_simulation(cfg, dataset=tiny_ds)
     pallas_res = run_simulation(replace(cfg, mixing_backend="pallas"),
                                 dataset=tiny_ds)
@@ -155,13 +151,17 @@ def test_pallas_mixing_backend_matches_jnp(tiny_ds):
 
 
 # ---------------------------------------------------------------------------
-# registry completeness: every algorithm, all three execution paths
+# registry completeness: every algorithm, all three execution paths, both
+# contact formats
 
 
+@pytest.mark.parametrize("contact_format", ["dense", "sparse"])
 @pytest.mark.parametrize("algorithm", algorithms.available_algorithms())
-def test_every_algorithm_parity_across_backends(tiny_ds, algorithm):
-    """Legacy loop == vmap backend == shard_map backend, per algorithm."""
-    cfg = _tiny_cfg(algorithm=algorithm)
+def test_every_algorithm_parity_across_backends(tiny_ds, algorithm,
+                                                contact_format):
+    """Legacy loop == vmap backend == shard_map backend, per algorithm and
+    contact format."""
+    cfg = _tiny_cfg(algorithm=algorithm, contact_format=contact_format)
     legacy = run_simulation(replace(cfg, use_scan_engine=False), dataset=tiny_ds)
     vmap_res = run_simulation(cfg, dataset=tiny_ds)
     shard_res = run_simulation(replace(cfg, backend="shard_map"), dataset=tiny_ds)
@@ -178,6 +178,47 @@ def test_every_algorithm_parity_across_backends(tiny_ds, algorithm):
         np.testing.assert_allclose(res.consensus_distance,
                                    legacy.consensus_distance, rtol=1e-4,
                                    atol=1e-5)
+
+
+@pytest.mark.parametrize("algorithm", algorithms.available_algorithms())
+def test_every_algorithm_sparse_matches_dense(tiny_ds, algorithm):
+    """The tentpole acceptance: the sparse neighbour-list engine reproduces
+    the dense trajectories for every registered algorithm at K=8."""
+    cfg = _tiny_cfg(algorithm=algorithm)
+    dense = run_simulation(replace(cfg, contact_format="dense"), dataset=tiny_ds)
+    sparse = run_simulation(cfg, dataset=tiny_ds)
+    assert sparse.epochs_evaluated == dense.epochs_evaluated
+    np.testing.assert_allclose(sparse.avg_accuracy, dense.avg_accuracy,
+                               atol=1e-5)
+    np.testing.assert_allclose(sparse.vehicle_accuracy,
+                               dense.vehicle_accuracy, atol=1e-5)
+    np.testing.assert_allclose(sparse.entropy, dense.entropy, atol=1e-5)
+    np.testing.assert_allclose(sparse.kl_divergence, dense.kl_divergence,
+                               atol=1e-5)
+    np.testing.assert_allclose(sparse.comm_mb, dense.comm_mb, rtol=1e-6)
+
+
+def test_d_max_overflow_is_a_loud_error(tiny_ds):
+    """An explicit slot budget smaller than a real contact set must raise,
+    not truncate: comm_range=3000 makes the 8-vehicle fleet a clique (9
+    slots incl. self with an RSU), d_max=4 cannot hold it."""
+    cfg = _tiny_cfg(epochs=2, eval_every=2, comm_range=3000.0, d_max=4)
+    with pytest.raises(ValueError, match="overflow"):
+        run_simulation(cfg, dataset=tiny_ds)
+    # the auto probe sizes the slots from the exact stream instead: no error
+    auto = run_simulation(replace(cfg, d_max=0), dataset=tiny_ds)
+    assert np.isfinite(auto.final_accuracy())
+
+
+def test_contact_density_knob_sets_slots(tiny_ds):
+    """contact_density pins D_max as a fleet fraction (here 4 of 8 slots):
+    plenty for the sparse grid contacts at K=8, so the run succeeds and the
+    stream reports the density-derived width."""
+    cfg = _tiny_cfg(epochs=2, eval_every=2, contact_density=0.5)
+    ctx = engine.build_context(cfg, dataset=tiny_ds)
+    assert ctx.contacts.d_max == 4
+    res = engine.run_with_context(ctx)
+    assert np.isfinite(res.final_accuracy())
 
 
 def test_shard_map_parity_with_rsus_and_drops(tiny_ds):

@@ -76,7 +76,9 @@ def test_spec_hash_ignores_execution_knobs(tiny_ds):
     cfg = _base()
     h = campaign_lib.spec_hash(cfg, (0, 1), sig)
     for knob in (dict(backend="shard_map"), dict(mixing_backend="pallas"),
-                 dict(use_scan_engine=False), dict(window_size=2)):
+                 dict(use_scan_engine=False), dict(window_size=2),
+                 dict(contact_format="dense"), dict(d_max=7),
+                 dict(contact_density=0.5)):
         assert campaign_lib.spec_hash(replace(cfg, **knob), (0, 1), sig) == h
 
 
@@ -104,12 +106,14 @@ def test_scan_traces_match_legacy_loop(tiny_ds):
 
 
 def test_comm_volume_counts_contact_edges(tiny_ds):
-    """comm_mb = (#contacts - self-loops) x per-exchange payload, per epoch."""
+    """comm_mb = (#contacts - self-loops) x per-exchange payload, per epoch
+    — counted on the dense stream, matched by the (default) sparse run."""
     cfg = _base(algorithm="dds", epochs=3)
     ctx = engine.build_context(cfg, dataset=tiny_ds)
     payload = engine.exchange_payload_mb(ctx)
     contacts = engine.ContactStream(
-        cfg, ctx.contacts.mob.net).window(cfg.epochs)
+        replace(cfg, contact_format="dense"),
+        ctx.contacts.mob.net).window(cfg.epochs)
     expected = [(c.sum() - np.trace(c)) * payload for c in contacts]
     res = run_simulation(cfg, dataset=tiny_ds)
     np.testing.assert_allclose(res.comm_mb, expected, rtol=1e-6)

@@ -1,0 +1,255 @@
+"""The sparse contact representation (core.contacts + topology conversion):
+round-trip, overflow, the sparse mixing constructors against their dense
+twins, the sparse P1 solve, and the sharded sparse mix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import aggregation, baselines, contacts, kl_solver, state_vector
+from repro.fed import topology
+
+
+def _random_contacts(rng, t=3, k=7, p=0.35):
+    """[T, K, K] symmetric 0/1 contact window with self-loops."""
+    c = (rng.random((t, k, k)) < p).astype(np.float32)
+    c = np.maximum(c, c.transpose(0, 2, 1))
+    c[:, np.arange(k), np.arange(k)] = 1.0
+    return c
+
+
+def _sparse(dense, d_max=None):
+    idx, mask = topology.neighbour_lists(
+        dense, d_max or topology.max_contact_degree(dense))
+    return contacts.SparseContacts(jnp.asarray(idx), jnp.asarray(mask))
+
+
+# ------------------------------------------------------------ round trip ----
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 5), st.floats(0.0, 1.0),
+       st.integers(0, 1000))
+def test_neighbour_list_round_trip(k, t, density, seed):
+    """dense -> neighbour lists -> dense is the identity at any density."""
+    rng = np.random.default_rng(seed)
+    dense = _random_contacts(rng, t=t, k=k, p=density)
+    d_max = topology.max_contact_degree(dense)
+    idx, mask = topology.neighbour_lists(dense, d_max)
+    assert idx.shape == (t, k, min(d_max, k)) and idx.dtype == np.int32
+    np.testing.assert_array_equal(
+        topology.dense_from_neighbours(idx, mask), dense)
+    # padding slots carry the row's own id (gathers stay in-bounds)
+    rows = np.broadcast_to(np.arange(k)[None, :, None], idx.shape)
+    assert (idx == np.where(mask > 0, idx, rows)).all()
+
+
+def test_neighbour_list_overflow_raises():
+    dense = np.ones((2, 5, 5), np.float32)  # clique: 5 contacts per row
+    with pytest.raises(ValueError, match="overflow"):
+        topology.neighbour_lists(dense, d_max=3)
+    idx, mask = topology.neighbour_lists(dense, d_max=5)  # exact fit is fine
+    assert (mask == 1).all()
+
+
+def test_single_epoch_and_d_max_clamp():
+    rng = np.random.default_rng(0)
+    dense = _random_contacts(rng, t=1, k=6)[0]     # [K, K] (no T axis)
+    idx, mask = topology.neighbour_lists(dense, d_max=100)  # clamped to K
+    assert idx.shape == (6, 6)
+    np.testing.assert_array_equal(topology.dense_from_neighbours(idx, mask),
+                                  dense)
+
+
+def test_count_edges_matches_dense():
+    rng = np.random.default_rng(1)
+    dense = _random_contacts(rng, t=1, k=9)[0]
+    sc = _sparse(dense)
+    assert float(contacts.count_edges(sc)) == float(
+        contacts.count_edges(jnp.asarray(dense)))
+    assert float(contacts.count_edges(sc)) == dense.sum() - 9
+
+
+def test_pad_slots_and_stack_windows():
+    rng = np.random.default_rng(2)
+    w1 = _sparse(_random_contacts(rng, t=2, k=6, p=0.2))
+    w2 = _sparse(_random_contacts(rng, t=2, k=6, p=0.9))
+    stacked = contacts.stack_windows([w1, w2])
+    d = max(w1.idx.shape[-1], w2.idx.shape[-1])
+    assert stacked.idx.shape == (2, 2, 6, d)
+    # padding is inert: scatter back and compare per seed
+    for s, w in enumerate((w1, w2)):
+        np.testing.assert_array_equal(
+            topology.dense_from_neighbours(np.asarray(stacked.idx[s]),
+                                           np.asarray(stacked.mask[s])),
+            topology.dense_from_neighbours(np.asarray(w.idx),
+                                           np.asarray(w.mask)))
+    with pytest.raises(ValueError, match="shrink"):
+        contacts.pad_slots(w2, 1)
+    # dense windows stack untouched
+    dw = [_random_contacts(rng, t=2, k=4), _random_contacts(rng, t=2, k=4)]
+    assert contacts.stack_windows(dw).shape == (2, 2, 4, 4)
+
+
+# -------------------------------------------------- mixing constructors ----
+
+
+@pytest.mark.parametrize("builder", [
+    aggregation.uniform_mixing,
+    aggregation.metropolis_mixing,
+    baselines.push_sum_mixing,
+])
+def test_sparse_mixing_matches_dense(builder):
+    rng = np.random.default_rng(3)
+    dense = _random_contacts(rng, t=1, k=8)[0]
+    w_dense = np.asarray(builder(jnp.asarray(dense)))
+    w_sparse = builder(_sparse(dense))
+    assert isinstance(w_sparse, contacts.SparseMixing)
+    np.testing.assert_allclose(contacts.mixing_to_dense(w_sparse), w_dense,
+                               atol=1e-6)
+
+
+def test_sample_size_mixing_sparse_matches_dense():
+    rng = np.random.default_rng(4)
+    dense = _random_contacts(rng, t=1, k=8)[0]
+    counts = jnp.asarray(rng.integers(1, 100, size=8), jnp.float32)
+    w_dense = np.asarray(aggregation.sample_size_mixing(jnp.asarray(dense),
+                                                        counts))
+    w_sparse = aggregation.sample_size_mixing(_sparse(dense), counts)
+    np.testing.assert_allclose(contacts.mixing_to_dense(w_sparse), w_dense,
+                               atol=1e-6)
+
+
+def test_mixing_from_alpha_sparse_matches_dense():
+    rng = np.random.default_rng(5)
+    dense = _random_contacts(rng, t=1, k=8)[0]
+    sc = _sparse(dense)
+    alpha_dense = jnp.asarray(rng.random((8, 8)), jnp.float32)
+    # the sparse alpha is the dense alpha gathered onto the slot layout
+    alpha_sparse = alpha_dense[jnp.arange(8)[:, None], sc.idx]
+    w_dense = np.asarray(aggregation.mixing_from_alpha(alpha_dense,
+                                                       jnp.asarray(dense)))
+    w_sparse = aggregation.mixing_from_alpha(alpha_sparse, sc)
+    np.testing.assert_allclose(contacts.mixing_to_dense(w_sparse), w_dense,
+                               atol=1e-6)
+
+
+# ----------------------------------------------------- mix application ----
+
+
+def test_sparse_mix_array_matches_matmul():
+    rng = np.random.default_rng(6)
+    dense = _random_contacts(rng, t=1, k=8)[0]
+    sc = _sparse(dense)
+    w_sparse = aggregation.uniform_mixing(sc)
+    w_dense = np.asarray(contacts.mixing_to_dense(w_sparse))
+    for trailing in [(), (5,), (3, 4)]:
+        x = jnp.asarray(rng.normal(size=(8,) + trailing), jnp.float32)
+        want = jnp.tensordot(jnp.asarray(w_dense), x, axes=([1], [0]))
+        got = contacts.sparse_mix_array(w_sparse, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+    # pytree + vector forms
+    tree = {"a": jnp.asarray(rng.normal(size=(8, 6)), jnp.float32)}
+    np.testing.assert_allclose(
+        np.asarray(aggregation.mix_params(w_sparse, tree)["a"]),
+        np.asarray(aggregation.mix_params(jnp.asarray(w_dense), tree)["a"]),
+        atol=1e-5)
+    y = jnp.asarray(rng.random(8), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(contacts.mix_vector(w_sparse, y)),
+        np.asarray(w_dense @ np.asarray(y)), atol=1e-6)
+
+
+def test_state_aggregate_sparse_matches_dense():
+    rng = np.random.default_rng(7)
+    dense = _random_contacts(rng, t=1, k=8)[0]
+    w_sparse = aggregation.uniform_mixing(_sparse(dense))
+    w_dense = jnp.asarray(contacts.mixing_to_dense(w_sparse))
+    s = jnp.asarray(rng.dirichlet(np.ones(8), size=8), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(state_vector.aggregate(s, w_sparse)),
+        np.asarray(state_vector.aggregate(s, w_dense)), atol=1e-6)
+
+
+def test_solve_p1_sparse_matches_dense():
+    """The neighbour-slot EG lands on the same optimum as the dense solve
+    (same solver body over gathered states); compare the scattered alphas."""
+    rng = np.random.default_rng(8)
+    k = 6
+    dense = _random_contacts(rng, t=1, k=k)[0]
+    sc = _sparse(dense)
+    states = jnp.asarray(rng.dirichlet(np.ones(k), size=k), jnp.float32)
+    target = jnp.asarray(rng.dirichlet(np.ones(k)), jnp.float32)
+    a_dense = np.asarray(kl_solver.solve_p1_all(states, target,
+                                                jnp.asarray(dense),
+                                                num_steps=120))
+    a_sparse = kl_solver.solve_p1_all(states, target, sc, num_steps=120)
+    assert a_sparse.shape == sc.idx.shape
+    np.testing.assert_allclose(
+        contacts.mixing_to_dense(contacts.SparseMixing(sc.idx, a_sparse)),
+        a_dense, atol=2e-4)
+
+
+def test_solve_p1_sparse_blocked_matches_unblocked(monkeypatch):
+    """The lax.map row-blocked sparse P1 (the K > P1_BLOCK memory guard,
+    incl. a padded final block) returns the same alphas as one vmap.
+
+    Drives the unjitted ``_solve_p1_neighbours`` directly: the public
+    ``solve_p1_all`` is jitted, so a P1_BLOCK monkeypatch after a
+    same-shape call would silently hit the jit cache and never trace the
+    blocked path."""
+    from functools import partial
+
+    rng = np.random.default_rng(10)
+    k = 7
+    dense = _random_contacts(rng, t=1, k=k)[0]
+    sc = _sparse(dense)
+    states = jnp.asarray(rng.dirichlet(np.ones(k), size=k), jnp.float32)
+    target = jnp.asarray(rng.dirichlet(np.ones(k)), jnp.float32)
+    solve = partial(kl_solver.solve_p1, num_steps=60)
+    full = np.asarray(
+        kl_solver._solve_p1_neighbours(states, target, sc, solve))
+    monkeypatch.setattr(kl_solver, "P1_BLOCK", 3)  # 3 blocks, last one padded
+    blocked = np.asarray(
+        kl_solver._solve_p1_neighbours(states, target, sc, solve))
+    assert blocked.shape == (k, sc.idx.shape[-1])
+    np.testing.assert_allclose(blocked, full, atol=1e-6)
+    # and the public jitted entry agrees with the unblocked internals
+    np.testing.assert_allclose(
+        np.asarray(kl_solver.solve_p1_all(states, target, sc, num_steps=60)),
+        full, atol=1e-6)
+
+
+def test_sharded_mix_global_is_identity_and_kernel_ref_agree():
+    from repro.core.vehicle_axis import GLOBAL, sharded_mix
+    from repro.kernels.gossip_mix import (gossip_mix_gather,
+                                          gossip_mix_gather_ref)
+
+    assert sharded_mix(aggregation.mix_params, GLOBAL) is aggregation.mix_params
+
+    rng = np.random.default_rng(9)
+    k, d, p = 8, 5, 260
+    idx = jnp.asarray(rng.integers(0, k, size=(k, d)), jnp.int32)
+    w = jnp.asarray(rng.random((k, d)), jnp.float32).at[:, -1].set(0.0)
+    flat = jnp.asarray(rng.normal(size=(k, p)), jnp.float32)
+    ref = gossip_mix_gather_ref(idx, w, flat)
+    out = gossip_mix_gather(idx, w, flat, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(contacts.sparse_mix_array(contacts.SparseMixing(idx, w),
+                                             flat)),
+        np.asarray(ref), atol=1e-5)
+
+
+# ------------------------------------------------------------- registry ----
+
+
+def test_contact_format_registry():
+    assert {"dense", "sparse"} <= set(contacts.available_contact_formats())
+    assert contacts.get_contact_format("sparse").sparse
+    assert not contacts.get_contact_format("dense").sparse
+    with pytest.raises(ValueError, match="sparse"):
+        contacts.get_contact_format("nope")

@@ -67,18 +67,47 @@ def test_window_chunking_is_invariant(tiny_ds):
     np.testing.assert_allclose(full.entropy, chunked.entropy, atol=1e-6)
 
 
-def test_contact_stream_chunking_matches(tiny_ds):
-    """window(a); window(b) == window(a+b): RNG streams advance per epoch."""
-    cfg = _tiny_cfg(num_rsus=1, p_drop=0.3)
+@pytest.mark.parametrize("contact_format", ["dense", "sparse"])
+def test_contact_stream_chunking_matches(tiny_ds, contact_format):
+    """window(a); window(b) == window(a+b): RNG streams advance per epoch,
+    in both contact formats."""
+    cfg = _tiny_cfg(num_rsus=1, p_drop=0.3, contact_format=contact_format)
     net = make_road_network(cfg.road_net, seed=cfg.seed)
     whole = engine.ContactStream(cfg, net).window(6)
     stream = engine.ContactStream(cfg, make_road_network(cfg.road_net, seed=cfg.seed))
-    chunks = np.concatenate([stream.window(2), stream.window(4)])
-    np.testing.assert_array_equal(whole, chunks)
-    # shape covers vehicles + RSUs, self-loops always on
+    parts = [stream.window(2), stream.window(4)]
     k = cfg.num_vehicles + cfg.num_rsus
-    assert whole.shape == (6, k, k)
-    assert (whole[:, np.arange(k), np.arange(k)] == 1.0).all()
+    if contact_format == "sparse":
+        chunks = np.concatenate([p.idx for p in parts])
+        np.testing.assert_array_equal(np.asarray(whole.idx), chunks)
+        np.testing.assert_array_equal(
+            np.asarray(whole.mask), np.concatenate([p.mask for p in parts]))
+        # every epoch/row carries its self-loop as a real contact
+        self_hits = (np.asarray(whole.idx) == np.arange(k)[None, :, None]) \
+            & (np.asarray(whole.mask) > 0)
+        assert (self_hits.sum(axis=-1) == 1).all()
+    else:
+        chunks = np.concatenate(parts)
+        np.testing.assert_array_equal(whole, chunks)
+        # shape covers vehicles + RSUs, self-loops always on
+        assert whole.shape == (6, k, k)
+        assert (whole[:, np.arange(k), np.arange(k)] == 1.0).all()
+
+
+def test_sparse_stream_matches_dense_stream(tiny_ds):
+    """The sparse window is a lossless re-encoding of the dense one: same
+    seed -> identical contact graphs (and the same dropped edges)."""
+    from repro.fed.topology import dense_from_neighbours
+
+    cfg = _tiny_cfg(num_rsus=1, p_drop=0.3)
+    dense = engine.ContactStream(
+        replace(cfg, contact_format="dense"),
+        make_road_network(cfg.road_net, seed=cfg.seed)).window(5)
+    sparse = engine.ContactStream(
+        cfg, make_road_network(cfg.road_net, seed=cfg.seed)).window(5)
+    np.testing.assert_array_equal(
+        dense_from_neighbours(np.asarray(sparse.idx), np.asarray(sparse.mask)),
+        dense)
 
 
 def test_run_seeds_matches_solo_runs(tiny_ds):

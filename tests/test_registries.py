@@ -1,0 +1,43 @@
+"""Registry/docs sync: every registered name carries a one-line summary and
+the committed ARCHITECTURE.md reference tables match the generated block."""
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# figure specs register on import of the benchmarks package (repo root)
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from repro import registries  # noqa: E402
+
+
+def test_every_registered_entry_has_a_one_liner():
+    entries = registries.registry_entries()
+    assert set(entries) == {spec.title for spec in registries.REGISTRIES}
+    for title, rows in entries.items():
+        assert rows, f"registry {title!r} is empty"
+        for name, summary in rows:
+            assert summary, f"{title}:{name} has no one-line summary"
+            assert "\n" not in summary
+
+
+def test_expected_builtins_are_listed():
+    entries = registries.registry_entries()
+    names = {title: {n for n, _ in rows} for title, rows in entries.items()}
+    assert {"dds", "dfl", "sp", "d_fedavg", "d_sgd"} <= names["algorithms"]
+    assert {"grid", "random", "spider", "highway"} <= names["road networks"]
+    assert {"manhattan"} <= names["mobility models"]
+    assert {"vmap", "shard_map"} <= names["execution backends"]
+    assert {"dense", "sparse"} <= names["contact formats"]
+    assert {"fig2", "fig3", "fig8", "fig9", "fig10"} <= names["campaign figures"]
+
+
+def test_architecture_tables_match_generated():
+    """docs/ARCHITECTURE.md's registry block is the literal output of
+    `python -m repro.registries` — regenerate and re-paste when a registry
+    changes."""
+    text = (REPO_ROOT / "docs" / "ARCHITECTURE.md").read_text()
+    begin = text.index(registries.BEGIN_MARK)
+    end = text.index(registries.END_MARK) + len(registries.END_MARK)
+    assert text[begin:end] == registries.render_markdown()
