@@ -23,7 +23,7 @@ import jax
 from repro.data.synthetic import synthetic_mnist
 from repro.fed import backends as backends_lib
 from repro.fed import engine as engine_lib
-from repro.fed.simulator import SimulationConfig
+from repro.roofline import scenario_cost
 
 VEHICLE_COUNTS = (8, 64)
 
@@ -43,10 +43,10 @@ def main() -> dict:
     ds = synthetic_mnist(n_train=1_000, n_test=200)
     results = []
     for k in VEHICLE_COUNTS:
-        cfg = SimulationConfig(
-            algorithm="dds", num_vehicles=k, epochs=48 if k == 8 else 8,
-            eval_every=1_000, eval_samples=100, local_steps=1, batch_size=4,
-            p1_steps=40, lr=0.15, seed=0)
+        # the workload is defined ONCE, next to the cost model that predicts
+        # it — tests/test_scenario_cost.py replays the same configs against
+        # the committed BENCH_engine.json rows
+        cfg = scenario_cost.bench_engine_config(k)
         vmap_eps = _steady_state_eps(cfg, ds, "vmap")
         shard_eps = _steady_state_eps(cfg, ds, "shard_map")
         results.append({

@@ -54,7 +54,7 @@ def child_main(k: int, contact_format: str, epochs: int) -> dict:
     from repro.data.synthetic import synthetic_mnist
     from repro.fed import engine as engine_lib
     from repro.fed import topology
-    from repro.fed.simulator import SimulationConfig
+    from repro.roofline import scenario_cost
 
     # the fleet covers a road net sized to the paper's density: ~1 vehicle
     # per junction, so contact sets (D_max) stay roughly constant with K
@@ -67,11 +67,10 @@ def child_main(k: int, contact_format: str, epochs: int) -> dict:
 
     # B=1 / E=1 / 4 eval samples keep per-vehicle conv training (identical
     # across formats) from drowning the contact-representation cost under
-    # measurement
-    cfg = SimulationConfig(
-        algorithm="dds", num_vehicles=k, epochs=epochs, road_net="scale_grid",
-        eval_every=10 * epochs, eval_samples=4, local_steps=1, batch_size=1,
-        lr=0.15, seed=0, contact_format=contact_format)
+    # measurement; the workload is defined ONCE, next to the cost model that
+    # predicts it (tests/test_scenario_cost.py replays the same configs
+    # against the committed BENCH_scale.json rows)
+    cfg = scenario_cost.bench_scale_config(k, contact_format, epochs)
     ds = synthetic_mnist(n_train=_N_TRAIN[k], n_test=256)
 
     ctx = engine_lib.build_context(cfg, dataset=ds)

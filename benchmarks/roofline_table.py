@@ -1,15 +1,38 @@
 """Roofline table benchmark: reads the dry-run JSONL artifacts and emits the
-three-term roofline CSV (one row per arch x shape x mesh)."""
+three-term roofline CSV (one row per arch x shape x mesh), followed by the
+scenario-cost-model predicted-vs-measured rows replayed from the committed
+BENCH_engine.json / BENCH_scale.json (when present)."""
 from __future__ import annotations
 
 import glob
 import os
 
+from repro.roofline import bench_schema, scenario_cost
 from repro.roofline.analysis import load_rows
 
 from .common import csv_row
 
 RESULT_GLOB = os.environ.get("REPRO_DRYRUN_GLOB", "results/dryrun_*.jsonl")
+
+
+def cost_model_rows() -> list[str]:
+    """Predicted-vs-measured CSV rows for every committed benchmark pair —
+    the same replay the validation suite asserts on
+    (tests/test_scenario_cost.py) and the cost-model CI artifact renders."""
+    rows = [csv_row("pair", "measured_ratio", "predicted_ratio", "verdict")]
+    replayed = []
+    if os.path.exists("BENCH_engine.json"):
+        replayed += scenario_cost.replay_bench_engine(
+            bench_schema.load_engine_report("BENCH_engine.json"))
+    if os.path.exists("BENCH_scale.json"):
+        replayed += scenario_cost.replay_bench_scale(
+            bench_schema.load_scale_report("BENCH_scale.json"))
+    if not replayed:
+        rows.append(csv_row("(no BENCH_*.json found)", "", "", ""))
+    for r in replayed:
+        rows.append(csv_row(r["pair"], f"{r['measured_ratio']:.3f}",
+                            f"{r['predicted_ratio']:.3f}", r["verdict"]))
+    return rows
 
 
 def main() -> list[str]:
@@ -20,12 +43,12 @@ def main() -> list[str]:
         rows.append(csv_row("(no dry-run artifacts found — run "
                             "python -m repro.launch.dryrun --all first)",
                             "", "", "", "", "", "", ""))
-        return rows
-    for r in load_rows(paths):
-        rows.append(csv_row(r.arch, r.shape, r.mesh, f"{r.compute_s:.3e}",
-                            f"{r.memory_s:.3e}", f"{r.collective_s:.3e}",
-                            r.dominant, f"{r.useful_ratio:.3f}"))
-    return rows
+    else:
+        for r in load_rows(paths):
+            rows.append(csv_row(r.arch, r.shape, r.mesh, f"{r.compute_s:.3e}",
+                                f"{r.memory_s:.3e}", f"{r.collective_s:.3e}",
+                                r.dominant, f"{r.useful_ratio:.3f}"))
+    return rows + cost_model_rows()
 
 
 if __name__ == "__main__":

@@ -132,6 +132,17 @@ def sharded_mix(base_mix_fn: MixParamsFn, shard: VehicleSharding) -> MixParamsFn
     return mix
 
 
+def psum_scatter_bytes(total_rows: int, row_bytes: int, num_shards: int) -> float:
+    """Per-device wire bytes of one tiled ``psum_scatter`` completing the
+    sharded gossip contraction: each device ships its ``[K, ...]`` partial
+    sums minus the block it keeps — ``(n - 1) / n`` of ``K * row_bytes``.
+    The closed-form collective-volume term of the analytical cost model
+    (roofline.scenario_cost); zero in the single-shard regime."""
+    if num_shards <= 1:
+        return 0.0
+    return (num_shards - 1) / num_shards * total_rows * row_bytes
+
+
 def local_nodes(total_nodes: int, shard: VehicleSharding) -> int:
     """Rows of the vehicle axis this shard owns (static)."""
     if total_nodes % shard.num_shards:

@@ -83,7 +83,8 @@ def _drive_windows(ctx, window_fn, progress: bool):
     is."""
     cfg = ctx.cfg
     t0 = time.time()
-    result = engine_lib.SimulationResult(config=cfg)
+    result = engine_lib.SimulationResult(config=cfg,
+                                         execution_plan=ctx.execution_plan)
     window_size = engine_lib._default_window(cfg, progress)
     state, rng = ctx.init_state, ctx.init_rng
     for start in range(0, cfg.epochs, window_size):
@@ -124,6 +125,9 @@ _ARGUMENT_ONLY_FIELDS = frozenset({
     "road_net", "distribution", "mobility", "seed", "epochs", "eval_every",
     "comm_range", "epoch_duration", "p_drop",
     "use_scan_engine", "window_size", "backend",
+    # resolved before any trace exists (engine.resolve_execution): by the
+    # time a window compiles, cfg.execution is always "manual"
+    "execution",
 })
 
 
@@ -175,7 +179,8 @@ class VmapBackend(Backend):
                 _SEED_WINDOW_CACHE.pop(next(iter(_SEED_WINDOW_CACHE)))
             _SEED_WINDOW_CACHE[cache_key] = (window_vmap, ds)
 
-        results = [engine_lib.SimulationResult(config=c.cfg) for c in ctxs]
+        results = [engine_lib.SimulationResult(
+            config=c.cfg, execution_plan=c.execution_plan) for c in ctxs]
         window_size = engine_lib._default_window(cfg, progress)
         for start in range(0, cfg.epochs, window_size):
             length = min(window_size, cfg.epochs - start)

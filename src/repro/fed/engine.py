@@ -110,6 +110,13 @@ class SimulationConfig:
     # one device; "shard_map" shards the stacked vehicle axis over the
     # federation mesh's vehicle axis (launch.mesh.make_federation_mesh)
     backend: str = "vmap"
+    # how the execution knobs above are chosen: "manual" runs them exactly as
+    # set; "auto" resolves backend / contact_format / mixing_backend / d_max
+    # at engine build time from the analytical cost model
+    # (roofline.scenario_cost) — the choice and its predicted epochs/s are
+    # recorded on the result's ``execution_plan``. Trajectory-neutral like
+    # the knobs it resolves (hash-neutral in the campaign store).
+    execution: str = "manual"
 
 
 def resolve_mix_params_fn(cfg: SimulationConfig) -> Callable:
@@ -142,6 +149,9 @@ class SimulationResult:
     kl_trace: list[float] = field(default_factory=list)
     comm_mb: list[float] = field(default_factory=list)
     wall_time: float = 0.0
+    # set when cfg.execution == "auto": the cost-model plan this run resolved
+    # to (chosen knobs, predicted epochs/s, per-candidate breakdowns)
+    execution_plan: dict | None = None
 
     def final_accuracy(self) -> float:
         return self.avg_accuracy[-1] if self.avg_accuracy else float("nan")
@@ -309,6 +319,7 @@ class EngineContext:
     eval_fn: Callable
     algorithm: algorithms_lib.Algorithm
     setup: algorithms_lib.AlgorithmSetup
+    execution_plan: dict | None = None
     _jit_cache: dict = field(default_factory=dict, repr=False)
 
     def bind(self, shard) -> "EngineContext":
@@ -348,12 +359,28 @@ class EngineContext:
         return self._jit_cache["eval"]
 
 
+def resolve_execution(cfg: SimulationConfig) -> tuple[SimulationConfig, dict | None]:
+    """Resolve ``execution="auto"`` to a concrete configuration via the
+    analytical cost model (roofline.scenario_cost) — no-op for "manual".
+    Returns ``(resolved config, plan)``; the plan records the choice and is
+    stamped on results / campaign rows."""
+    if cfg.execution != "auto":
+        return cfg, None
+    from ..roofline import scenario_cost
+
+    return scenario_cost.resolve_auto(cfg)
+
+
 def build_context(cfg: SimulationConfig, dataset=None) -> EngineContext:
     """Shared setup for both the fused engine and the legacy loop: data
     partition, mobility stream, model init — then the registered algorithm
     (``fed.algorithms``) supplies state init, round, sampling, and model
     extraction. No algorithm dispatch lives here: new algorithms register
-    themselves and are addressable by ``cfg.algorithm`` immediately."""
+    themselves and are addressable by ``cfg.algorithm`` immediately.
+
+    ``execution="auto"`` configs are resolved here (cost-model backend /
+    format selection); the resulting plan rides on ``ctx.execution_plan``."""
+    cfg, execution_plan = resolve_execution(cfg)
     ds = dataset or data_lib.load_dataset(cfg.dataset, seed=cfg.seed)
     init_fn, loss_fn, accuracy_fn = cnn_lib.make_cnn_task(ds.name)
 
@@ -403,7 +430,8 @@ def build_context(cfg: SimulationConfig, dataset=None) -> EngineContext:
         round_fn=partial(algo.round, setup),
         sample_fn=partial(algo.sample, setup),
         model_of=partial(algo.model_of, setup),
-        eval_fn=eval_fn, algorithm=algo, setup=setup)
+        eval_fn=eval_fn, algorithm=algo, setup=setup,
+        execution_plan=execution_plan)
 
 
 def build_window_fn(ctx: EngineContext) -> Callable:
@@ -530,8 +558,16 @@ def run_seeds(cfg: SimulationConfig, seeds, dataset=None,
     (vmap), per-seed ``wall_time`` stays 0 — no per-seed attribution exists;
     when seeds run individually (shard_map), each result carries its own
     genuine wall time.
+
+    ``execution="auto"`` is resolved HERE, before backend dispatch — the
+    backend name itself is one of the knobs the cost model picks.
     """
     from . import backends as backends_lib
 
-    return backends_lib.get_backend(cfg.backend).run_seeds(
+    cfg, plan = resolve_execution(cfg)
+    results = backends_lib.get_backend(cfg.backend).run_seeds(
         cfg, seeds, dataset=dataset, progress=progress)
+    if plan is not None:
+        for r in results:
+            r.execution_plan = plan
+    return results

@@ -56,6 +56,10 @@ Key = tuple[str, str, str, str]
 NON_SEMANTIC_FIELDS = frozenset({
     "use_scan_engine", "window_size", "backend", "mixing_backend",
     "contact_format", "d_max", "contact_density",
+    # "auto" only chooses among the knobs above (engine.resolve_execution),
+    # so it is hash-neutral by construction — two hosts resolving the same
+    # scenario to different backends still share one store row
+    "execution",
 })
 
 
@@ -177,12 +181,18 @@ def scenario_row(key: Key, cfg: SimulationConfig, seeds: Sequence[int],
     acc_mean, acc_std = metrics.mean_std(sr.final_accuracies())
     semantic = {f.name: getattr(cfg, f.name) for f in fields(cfg)
                 if f.name not in NON_SEMANTIC_FIELDS}
+    # the knobs that actually ran: under execution="auto" the results carry
+    # the cost-model-resolved config + plan, not the requested knobs
+    rcfg = sr.results[0].config
     return jsonable({
         "spec_hash": h,
         "key": list(key),
         "config": semantic,
-        "engine": {"backend": cfg.backend, "mixing_backend": cfg.mixing_backend,
-                   "contact_format": cfg.contact_format,
+        "engine": {"backend": rcfg.backend,
+                   "mixing_backend": rcfg.mixing_backend,
+                   "contact_format": rcfg.contact_format,
+                   "execution": cfg.execution,
+                   "execution_plan": sr.results[0].execution_plan,
                    "path": "run_sweep/run_seeds"},
         "dataset_sig": ds_sig,
         "seeds": [int(s) for s in seeds],

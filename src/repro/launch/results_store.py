@@ -10,9 +10,13 @@ the old per-figure pickle cache (``benchmarks/common.run_or_load``):
 * rows are plain JSON (inspectable, diffable, artifact-uploadable), not
   pickles of live objects;
 * the hash covers only fields that change trajectories — execution knobs
-  (backend, mixing_backend, window_size, use_scan_engine) are parity-tested
-  to be trajectory-neutral (tests/test_backends.py) and are recorded in the
-  row's ``engine`` section instead of the key.
+  (backend, mixing_backend, window_size, use_scan_engine, and ``execution``,
+  whose "auto" mode only chooses among the others) are parity-tested to be
+  trajectory-neutral (tests/test_backends.py) and are recorded in the row's
+  ``engine`` section instead of the key; under ``execution="auto"`` that
+  section additionally carries the cost model's resolution plan
+  (roofline.scenario_cost), so two hosts resolving the same scenario to
+  different backends still share one row.
 
 Append-only on disk; duplicate hashes resolve last-write-wins on load.
 """

@@ -134,6 +134,10 @@ def main(argv: Sequence[str] | None = None) -> list[str]:
     ap.add_argument("--mixing-backend", default="jnp",
                     choices=["jnp", "pallas"],
                     help="gossip-mix implementation (pallas = TPU kernel)")
+    ap.add_argument("--execution", default="manual",
+                    choices=["manual", "auto"],
+                    help="auto picks backend/contact_format/d_max from the "
+                         "analytical cost model (roofline.scenario_cost)")
     args = ap.parse_args(argv)
 
     base = SimulationConfig(
@@ -141,7 +145,7 @@ def main(argv: Sequence[str] | None = None) -> list[str]:
         local_steps=args.local_steps, batch_size=args.batch_size,
         eval_every=args.eval_every, p1_steps=args.p1_steps,
         window_size=args.window_size, backend=args.backend,
-        mixing_backend=args.mixing_backend)
+        mixing_backend=args.mixing_backend, execution=args.execution)
     spec = SweepSpec(road_nets=args.road_nets, distributions=args.distributions,
                      algorithms=args.algorithms, seeds=args.seeds, base=base)
 

@@ -1,0 +1,118 @@
+"""BENCH_*.json schema: the committed benchmark artifacts satisfy the
+contract the cost-model validation suite replays, and drifted output (missing
+keys, wrong types, inconsistent ratios, missing cells) fails loudly."""
+import copy
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.roofline.bench_schema import (
+    BenchSchemaError, load_engine_report, load_scale_report,
+    validate_engine_report, validate_scale_report)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def engine_report():
+    return load_engine_report(str(REPO_ROOT / "BENCH_engine.json"))
+
+
+@pytest.fixture(scope="module")
+def scale_report():
+    return load_scale_report(str(REPO_ROOT / "BENCH_scale.json"))
+
+
+def test_committed_engine_report_valid(engine_report):
+    assert engine_report["benchmark"] == "engine_backends"
+    assert engine_report["device_count"] >= 1
+    assert {r["num_vehicles"] for r in engine_report["results"]} >= {8, 64}
+
+
+def test_committed_scale_report_valid(scale_report):
+    ks = {r["num_vehicles"] for r in scale_report["results"]}
+    assert ks >= {8, 64, 256, 1024}
+    # every K carries both formats (validator guarantees it; assert anyway)
+    cells = {(r["num_vehicles"], r["contact_format"])
+             for r in scale_report["results"]}
+    assert all((k, fmt) in cells for k in ks for fmt in ("dense", "sparse"))
+
+
+def test_engine_missing_key_rejected(engine_report):
+    bad = copy.deepcopy(engine_report)
+    del bad["results"][0]["vmap_epochs_per_s"]
+    with pytest.raises(BenchSchemaError, match="vmap_epochs_per_s"):
+        validate_engine_report(bad)
+
+
+def test_engine_wrong_type_rejected(engine_report):
+    bad = copy.deepcopy(engine_report)
+    bad["results"][0]["num_vehicles"] = "8"
+    with pytest.raises(BenchSchemaError, match="num_vehicles"):
+        validate_engine_report(bad)
+
+
+def test_engine_inconsistent_ratio_rejected(engine_report):
+    bad = copy.deepcopy(engine_report)
+    bad["results"][0]["shard_vs_vmap"] = 99.0
+    with pytest.raises(BenchSchemaError, match="inconsistent"):
+        validate_engine_report(bad)
+
+
+def test_engine_nonpositive_rate_rejected(engine_report):
+    bad = copy.deepcopy(engine_report)
+    bad["results"][0]["vmap_epochs_per_s"] = 0.0
+    with pytest.raises(BenchSchemaError, match="out of range"):
+        validate_engine_report(bad)
+
+
+def test_engine_wrong_benchmark_name_rejected(engine_report):
+    bad = copy.deepcopy(engine_report)
+    bad["benchmark"] = "something_else"
+    with pytest.raises(BenchSchemaError, match="expected benchmark"):
+        validate_engine_report(bad)
+
+
+def test_scale_missing_cell_rejected(scale_report):
+    bad = copy.deepcopy(scale_report)
+    bad["results"] = [r for r in bad["results"]
+                      if not (r["num_vehicles"] == 64
+                              and r["contact_format"] == "dense")]
+    with pytest.raises(BenchSchemaError, match="missing the dense cell"):
+        validate_scale_report(bad)
+
+
+def test_scale_sparse_without_d_max_rejected(scale_report):
+    bad = copy.deepcopy(scale_report)
+    sparse = next(r for r in bad["results"] if r["contact_format"] == "sparse")
+    sparse["d_max"] = 0
+    with pytest.raises(BenchSchemaError, match="d_max"):
+        validate_scale_report(bad)
+
+
+def test_scale_unknown_format_rejected(scale_report):
+    bad = copy.deepcopy(scale_report)
+    bad["results"][0]["contact_format"] = "csr"
+    with pytest.raises(BenchSchemaError, match="contact_format"):
+        validate_scale_report(bad)
+
+
+def test_empty_results_rejected(engine_report):
+    bad = copy.deepcopy(engine_report)
+    bad["results"] = []
+    with pytest.raises(BenchSchemaError, match="non-empty"):
+        validate_engine_report(bad)
+
+
+def test_bool_is_not_an_int(engine_report):
+    """bool is an int subclass — the validator must still reject it."""
+    bad = copy.deepcopy(engine_report)
+    bad["results"][0]["epochs"] = True
+    with pytest.raises(BenchSchemaError, match="epochs"):
+        validate_engine_report(bad)
+
+
+def test_reports_are_plain_json(engine_report, scale_report):
+    json.dumps(engine_report)
+    json.dumps(scale_report)

@@ -78,8 +78,48 @@ def test_spec_hash_ignores_execution_knobs(tiny_ds):
     for knob in (dict(backend="shard_map"), dict(mixing_backend="pallas"),
                  dict(use_scan_engine=False), dict(window_size=2),
                  dict(contact_format="dense"), dict(d_max=7),
-                 dict(contact_density=0.5)):
+                 dict(contact_density=0.5), dict(execution="auto")):
         assert campaign_lib.spec_hash(replace(cfg, **knob), (0, 1), sig) == h
+
+
+def test_spec_hash_stable_across_auto_resolutions(tiny_ds):
+    """execution="auto" resolves host-dependently (device count, cost-model
+    profile) — but whatever combination of execution knobs it lands on, the
+    hash must be the one the "auto" request itself hashes to, so two hosts
+    resolving the same scenario differently still share one store row."""
+    sig = campaign_lib.dataset_signature(tiny_ds)
+    h_auto = campaign_lib.spec_hash(_base(execution="auto"), (0, 1), sig)
+    host_a = _base(execution="manual", backend="vmap",
+                   contact_format="sparse", d_max=3)
+    host_b = _base(execution="manual", backend="shard_map",
+                   contact_format="dense", mixing_backend="pallas")
+    assert campaign_lib.spec_hash(host_a, (0, 1), sig) == h_auto
+    assert campaign_lib.spec_hash(host_b, (0, 1), sig) == h_auto
+
+
+def test_scenario_row_records_auto_resolution(tiny_ds):
+    """A campaign row run under execution="auto" records the requested knob,
+    the knobs that actually ran, and the cost model's plan — all JSON-able."""
+    from repro.launch import sweep as sweep_lib
+
+    cfg = _base(execution="auto", eval_samples=60)
+    cell = sweep_lib.SweepSpec(road_nets=("grid",),
+                               distributions=("balanced_noniid",),
+                               algorithms=("dds",), seeds=(0,), base=cfg)
+    sr = sweep_lib.run_sweep(cell, dataset=tiny_ds)[0]
+    row = campaign_lib.scenario_row(
+        ("mnist", "grid", "balanced_noniid", "dds"), cfg, (0,), sr,
+        campaign_lib.dataset_signature(tiny_ds), "deadbeefdeadbeef")
+    eng = row["engine"]
+    assert eng["execution"] == "auto"
+    assert eng["execution_plan"]["requested"] == "auto"
+    assert eng["execution_plan"]["resolved"]["backend"] == eng["backend"]
+    assert eng["execution_plan"]["resolved"]["contact_format"] \
+        == eng["contact_format"]
+    assert eng["execution_plan"]["predicted_epochs_per_s"] > 0
+    # the semantic config half never mentions execution (hash-neutral knob)
+    assert "execution" not in row["config"]
+    assert json.dumps(row)
 
 
 def test_spec_hash_tracks_semantic_changes(tiny_ds):

@@ -147,3 +147,61 @@ def test_sweep_runner_smoke(tiny_ds):
         assert epochs == [3] and curve.shape == (1,)
     rows = sweep_lib.summary_rows(results)
     assert len(rows) == 3 and rows[0].startswith("road_net,")
+
+
+# ------------------------------------------------------------------------
+# probe_d_max: exact-probe parity + the pin -> density -> probe chain
+# ------------------------------------------------------------------------
+
+def _bruteforce_d_max(cfg) -> int:
+    """Host-side recount, independent of probe_d_max's chunked replay: pull
+    the full dense window off a fresh ContactStream and count the largest
+    contact set (incl. self) directly."""
+    net = make_road_network(cfg.road_net, seed=cfg.seed)
+    stream = engine.ContactStream(replace(cfg, contact_format="dense"), net)
+    dense = stream.window(cfg.epochs)
+    return int((np.asarray(dense) > 0).sum(axis=-1).max())
+
+
+@pytest.mark.parametrize("variant", [
+    dict(seed=0), dict(seed=3, num_vehicles=9), dict(seed=5, p_drop=0.4),
+    dict(seed=7, num_rsus=2), dict(seed=11, epochs=13, comm_range=150.0),
+])
+def test_probe_d_max_matches_bruteforce(variant):
+    """The exact full-horizon probe equals a brute-force recount over the
+    same seeded contact stream — across fleets, drops, RSUs and horizons."""
+    cfg = _tiny_cfg(**variant)
+    net = make_road_network(cfg.road_net, seed=cfg.seed)
+    assert engine.probe_d_max(cfg, net) == _bruteforce_d_max(cfg)
+
+
+def test_probe_d_max_chunk_invariant():
+    """Chunked replay (the bounded-memory path) equals one-shot replay."""
+    cfg = _tiny_cfg(seed=2, epochs=11)
+    net = make_road_network(cfg.road_net, seed=cfg.seed)
+    assert (engine.probe_d_max(cfg, net, chunk=3)
+            == engine.probe_d_max(cfg, net, chunk=0))
+
+
+def test_d_max_resolution_order():
+    """The PR-4 fallback chain: cfg.d_max pin beats contact_density beats
+    the probe; each lower rung engages only when the higher is unset."""
+    cfg = _tiny_cfg(seed=4)
+    net = make_road_network(cfg.road_net, seed=cfg.seed)
+
+    # 1. explicit pin wins even with a density set, and clamps to the fleet
+    pinned = engine.ContactStream(replace(cfg, d_max=3, contact_density=0.9),
+                                  net)
+    assert pinned.d_max == 3
+    assert engine.ContactStream(replace(cfg, d_max=99), net).d_max \
+        == cfg.num_vehicles
+
+    # 2. density sizes ceil(density * total), clamped to [1, total]
+    assert engine.ContactStream(replace(cfg, contact_density=0.5), net).d_max \
+        == int(np.ceil(0.5 * cfg.num_vehicles))
+    assert engine.ContactStream(replace(cfg, contact_density=1e-9), net).d_max \
+        == 1
+
+    # 3. neither set: the exact probe
+    assert engine.ContactStream(cfg, net).d_max \
+        == engine.probe_d_max(cfg, net) == _bruteforce_d_max(cfg)

@@ -71,3 +71,103 @@ def test_model_flops_formulas():
     from repro.configs import get_config
     mx = get_config("mixtral-8x7b")
     assert mx.active_param_count() < 0.4 * mx.param_count()
+
+
+# ------------------------------------------------------------------------
+# property tests: the parser internals (hypothesis; repro/_compat fallback
+# when the real library is absent — installed by tests/conftest.py)
+# ------------------------------------------------------------------------
+
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.roofline.hlo_cost import (  # noqa: E402
+    _DTYPE_BYTES, _first_shape_dims, _scan_balanced, _shape_bytes)
+
+_dtypes = st.sampled_from(sorted(_DTYPE_BYTES))
+_dims = st.lists(st.integers(0, 9), min_size=0, max_size=4)
+_shapes = st.lists(st.tuples(_dtypes, _dims), min_size=0, max_size=5)
+
+
+def _render_shape(dt: str, dims: list) -> str:
+    return f"{dt}[{','.join(str(d) for d in dims)}]"
+
+
+def _expected_bytes(dt: str, dims: list) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES[dt]
+
+
+@settings(max_examples=200)
+@given(_shapes, st.booleans())
+def test_shape_bytes_sums_all_shapes(shapes, nested):
+    """_shape_bytes over any rendering (flat operand list or nested tuple
+    text) is the sum of prod(dims) * dtype_bytes — zero-dim shapes count 0,
+    scalar [] shapes count one element."""
+    rendered = [_render_shape(dt, dims) for dt, dims in shapes]
+    if nested:
+        # nested-tuple result type text, as printed for scan carries
+        text = "(" + ", ".join(rendered[: len(rendered) // 2]) + ", (" \
+               + ", ".join(rendered[len(rendered) // 2:]) + "))"
+    else:
+        text = " ".join(rendered)
+    expected = sum(_expected_bytes(dt, dims) for dt, dims in shapes)
+    assert _shape_bytes(text) == expected
+
+
+@settings(max_examples=200)
+@given(_dtypes, _dims)
+def test_shape_bytes_scalar_and_zero_dim(dt, dims):
+    assert _shape_bytes(f"{dt}[]") == _DTYPE_BYTES[dt]
+    if 0 in dims:
+        assert _shape_bytes(_render_shape(dt, dims)) == 0
+
+
+@settings(max_examples=200)
+@given(_dtypes, _dims, _dims)
+def test_first_shape_dims_takes_first_match(dt, dims_a, dims_b):
+    text = f"fusion({_render_shape(dt, dims_a)}, {_render_shape(dt, dims_b)})"
+    assert _first_shape_dims(text) == dims_a
+    assert _first_shape_dims("no shapes here") == []
+
+
+def test_shape_bytes_ignores_unknown_dtypes():
+    # plausible-looking tokens that are NOT dtypes must not count
+    assert _shape_bytes("q7[3,3] zz[2]") == 0
+    assert _shape_bytes("f32[2] q7[3,3]") == 8
+
+
+@settings(max_examples=200)
+@given(st.lists(st.sampled_from(["(", ")", "a", ","]), min_size=1,
+                max_size=24))
+def test_scan_balanced_matches_reference(tokens):
+    """_scan_balanced agrees with a reference counter on arbitrary paren
+    soup: from the first '(', it returns the matching ')' index, or
+    len(s) - 1 when unbalanced."""
+    s = "".join(tokens)
+    start = s.find("(")
+    if start < 0:
+        return
+    depth = 0
+    expected = len(s) - 1
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                expected = i
+                break
+    assert _scan_balanced(s, start) == expected
+
+
+@settings(max_examples=100)
+@given(st.integers(0, 6), _shapes)
+def test_scan_balanced_nested_tuples(depth, shapes):
+    """Well-formed nested tuple text (any depth, with shape payloads):
+    _scan_balanced returns exactly the final closing paren."""
+    inner = ", ".join(_render_shape(dt, dims) for dt, dims in shapes)
+    s = "(" * (depth + 1) + inner + ")" * (depth + 1)
+    assert _scan_balanced(s, 0) == len(s) - 1
