@@ -25,8 +25,10 @@ from repro.launch import report as report_lib
 # the acceptance set: every figure the smoke campaign must regenerate
 # (fig6/fig7 are registered too — CIFAR-10 curves — but off by default
 # because two extra distributions x three algorithms double the CPU cost;
-# add them with --figures or run the full tier)
-DEFAULT_FIGURES = ("fig2", "fig3", "fig8", "fig9", "fig10")
+# add them with --figures or run the full tier). fig_overlap rides along
+# cheaply: its sync case is fig8's grid/dds store row, so it adds exactly
+# one scenario (dds@delayed).
+DEFAULT_FIGURES = ("fig2", "fig3", "fig8", "fig9", "fig10", "fig_overlap")
 SMOKE_SEEDS = (0, 1, 2)
 
 _DATASETS: dict[tuple[str, str], object] = {}

@@ -26,7 +26,7 @@ import time
 from repro.launch import campaign as campaign_lib
 
 from . import (common, engine_scale, fig2_cdf, fig3_correlation, fig6_7_cifar,
-               fig8_mnist, fig9_epochs_to_target, fig10_consensus,
+               fig8_mnist, fig9_epochs_to_target, fig10_consensus, fig_overlap,
                kernel_micro, roofline_table, sweep_scenarios)
 
 BENCHMARKS = {
@@ -36,6 +36,7 @@ BENCHMARKS = {
     "fig9_epochs_to_target": fig9_epochs_to_target.main,
     "fig6_7_cifar": fig6_7_cifar.main,
     "fig10_consensus": fig10_consensus.main,
+    "fig_overlap": fig_overlap.main,
     "kernel_micro": kernel_micro.main,
     "engine_scale": engine_scale.main,   # smoke K by default; full sweep via
                                          # `python -m benchmarks.engine_scale`

@@ -21,7 +21,8 @@ pick them up by name with no engine edits.
 from __future__ import annotations
 
 import time
-from dataclasses import replace
+from dataclasses import fields, replace
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -128,12 +129,13 @@ _ARGUMENT_ONLY_FIELDS = frozenset({
     # resolved before any trace exists (engine.resolve_execution): by the
     # time a window compiles, cfg.execution is always "manual"
     "execution",
+    # only the shard_map trace reads the bucket size; the vmap windows this
+    # cache holds never touch it
+    "comm_bucket_mb",
 })
 
 
 def _seed_window_key(cfg, ds, n_seeds: int, table_shape) -> tuple:
-    from dataclasses import fields
-
     traced = tuple(
         (f.name, getattr(cfg, f.name)) for f in fields(cfg)
         if f.name not in _ARGUMENT_ONLY_FIELDS)
@@ -237,6 +239,11 @@ class ShardMapBackend(Backend):
         sctx = ctx.bind(shard)
 
         state_spec = ctx.algorithm.state_pspec(sctx.setup, "vehicle")
+        if ctx.cfg.overlap == "delayed":
+            # the carry widens to (algo state, stale params): the double
+            # buffer shards row-wise exactly like the live params stack
+            state_spec = (state_spec, jax.tree_util.tree_map(
+                lambda _: P("vehicle"), ctx.setup.params_stack))
         data_spec = pipeline.FederatedData(P(), P(), P(), P())
         # contact windows are replicated on every shard in either format
         # (the mixing remaps them per shard; see vehicle_axis.sharded_mix)

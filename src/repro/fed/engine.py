@@ -96,6 +96,21 @@ class SimulationConfig:
     # how the gossip mix W @ w executes: "jnp" (tensordot reference, the CPU
     # default) | "pallas" (the gossip_mix TPU kernels; jnp fallback off-TPU)
     mixing_backend: str = "jnp"
+    # communication/compute overlap (docs/SCALING.md "Overlap & multi-host"):
+    # comm_bucket_mb packs the sharded mix's flattened param leaves into
+    # ~this many MiB of partial-sum payload per psum_scatter, pipelined so
+    # the next bucket's partial matmul issues while the previous scatter is
+    # in flight. Semantics-preserving (cross-shard sums are elementwise;
+    # parity-tested), ignored outside the shard_map backend; 0 restores one
+    # scatter per leaf.
+    comm_bucket_mb: float = 4.0
+    # "sync" mixes each round's own params (paper Eq. 10). "delayed" double-
+    # buffers the exchange: round t's neighbour payloads are the params that
+    # were on the air while round t trained — one round stale — while each
+    # vehicle's own contribution stays current (core.vehicle_axis
+    # .delayed_gossip_mix). A SEMANTIC knob (changes trajectories; campaign-
+    # hashed when != "sync"); scan-engine only.
+    overlap: str = "sync"
     # extensions (paper Sec. V-C / Sec. VII): data-less static RSUs join the
     # federation as relays; V2V exchanges fail with probability p_drop
     num_rsus: int = 0
@@ -330,8 +345,9 @@ class EngineContext:
         — the bound context traces different programs."""
         setup = replace(
             self.setup, shard=shard,
-            mix_params_fn=vehicle_axis.sharded_mix(self.setup.mix_params_fn,
-                                                   shard))
+            mix_params_fn=vehicle_axis.sharded_mix(
+                self.setup.mix_params_fn, shard,
+                comm_bucket_mb=self.cfg.comm_bucket_mb))
         algo = self.algorithm
         return replace(
             self, setup=setup,
@@ -423,10 +439,20 @@ def build_context(cfg: SimulationConfig, dataset=None) -> EngineContext:
         opt_stack=opt_stack, local_mask=local_mask,
         mix_params_fn=resolve_mix_params_fn(cfg))
 
+    if cfg.overlap not in ("sync", "delayed"):
+        raise ValueError(f"unknown overlap {cfg.overlap!r} (sync|delayed)")
+    init_state = algo.init_state(setup)
+    if cfg.overlap == "delayed":
+        # the double buffer: the params each vehicle last put on the air.
+        # Round 0 mixes the identical broadcast init — exactly what a real
+        # fleet's first in-flight exchange would carry. Lives in the scan
+        # carry so trajectories stay window-chunk-invariant.
+        init_state = (init_state, params_stack)
+
     return EngineContext(
         cfg=cfg, total_nodes=total_nodes, fed_data=fed_data, target=target,
         local_mask=local_mask, contacts=contacts,
-        init_state=algo.init_state(setup), init_rng=rng,
+        init_state=init_state, init_rng=rng,
         round_fn=partial(algo.round, setup),
         sample_fn=partial(algo.sample, setup),
         model_of=partial(algo.model_of, setup),
@@ -449,6 +475,31 @@ def build_window_fn(ctx: EngineContext) -> Callable:
     # rows this trace sees: the full stack, or this shard's block
     local_nodes = vehicle_axis.local_nodes(ctx.total_nodes, shard)
     payload_mb = exchange_payload_mb(ctx)
+    delayed = ctx.cfg.overlap == "delayed"
+    if delayed:
+        algo, setup = ctx.algorithm, ctx.setup
+        # the stale-buffer combine over the (possibly shard-wrapped) mix;
+        # the carried state widens to (algo state, stale params)
+        delayed_mix = vehicle_axis.delayed_gossip_mix(setup.mix_params_fn,
+                                                      shard)
+
+    def delayed_round(st, contacts_t, target, batch, kr, fed_data):
+        """One round under overlap="delayed": the algorithm's mix call is
+        rerouted through the stale buffer, and whatever pytree the algorithm
+        put on the air this round (its mix input) becomes the next buffer —
+        algorithm-agnostic, whether it mixes before training (dds/dfl/d_sgd),
+        after (d_fedavg), or a bias-corrected stack (sp)."""
+        algo_st, stale = st
+        sent = {}
+
+        def mix(mixing, params):
+            sent["payload"] = params
+            return delayed_mix(mixing, params, stale)
+
+        algo_st, diags = algo.round(replace(setup, mix_params_fn=mix),
+                                    algo_st, contacts_t, target, batch, kr,
+                                    fed_data)
+        return (algo_st, sent.get("payload", stale)), diags
 
     def window(state, rng, fed_data, target, contacts, eval_mask):
         def evaluate(st):
@@ -466,8 +517,10 @@ def build_window_fn(ctx: EngineContext) -> Callable:
             contacts_t, do_eval = inp
             key, kb, kr = jax.random.split(key, 3)
             batch = sample_fn(fed_data, kb)
-            st, diags = round_fn(st, contacts_t, target, batch, kr, fed_data)
-            accs, consensus = jax.lax.cond(do_eval, evaluate, skip, st)
+            fn = delayed_round if delayed else round_fn
+            st, diags = fn(st, contacts_t, target, batch, kr, fed_data)
+            algo_st = st[0] if delayed else st
+            accs, consensus = jax.lax.cond(do_eval, evaluate, skip, algo_st)
             # directed V2V exchanges this round: contact edges minus the
             # always-on self loops (contacts are replicated on every shard;
             # the dense matrix and the neighbour list count identically)

@@ -43,6 +43,10 @@ def run_simulation(cfg: SimulationConfig, dataset=None, progress: bool = False) 
 def run_legacy_loop(ctx: EngineContext, progress: bool = False) -> SimulationResult:
     """The pre-engine path: one host-dispatched jitted round per epoch."""
     cfg = ctx.cfg
+    if cfg.overlap != "sync":
+        raise ValueError(
+            "overlap='delayed' needs the scan engine's double-buffered carry "
+            "(set use_scan_engine=True)")
     t0 = time.time()
     result = SimulationResult(config=cfg)
     state, rng = ctx.init_state, ctx.init_rng

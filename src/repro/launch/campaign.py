@@ -60,7 +60,16 @@ NON_SEMANTIC_FIELDS = frozenset({
     # so it is hash-neutral by construction — two hosts resolving the same
     # scenario to different backends still share one store row
     "execution",
+    # the bucketed-collective payload size only regroups the sharded mix's
+    # psum_scatters (elementwise sums — parity-tested identical)
+    "comm_bucket_mb",
 })
+
+# semantic fields added AFTER store rows were first committed enter the hash
+# only when off-default: a run at the elided default is byte-identical to a
+# pre-knob run, so historic rows keep their hashes and stay cache hits.
+# ("overlap" landed with the delayed-gossip mode in PR 10.)
+HASH_ELIDED_DEFAULTS = {"overlap": "sync"}
 
 
 @dataclass(frozen=True)
@@ -152,9 +161,16 @@ class FigureResult:
 
 
 def scenario_config(base: SimulationConfig, key: Key) -> SimulationConfig:
+    """Lower a scenario key onto the campaign's base config. The algorithm
+    axis may carry an ``@<overlap>`` variant suffix (e.g. ``"dds@delayed"``):
+    the same registered algorithm with the engine's gossip-overlap mode set
+    to the suffix — how a figure puts synchronous and delayed-gossip runs of
+    one algorithm side by side on the grid."""
     dataset, net, dist, algo = key
-    return replace(base, dataset=dataset, road_net=net, distribution=dist,
-                   algorithm=algo)
+    algo, _, variant = algo.partition("@")
+    cfg = replace(base, dataset=dataset, road_net=net, distribution=dist,
+                  algorithm=algo)
+    return replace(cfg, overlap=variant) if variant else cfg
 
 
 def dataset_signature(ds) -> list:
@@ -165,9 +181,17 @@ def dataset_signature(ds) -> list:
 
 def spec_hash(cfg: SimulationConfig, seeds: Sequence[int], ds_sig: list) -> str:
     """Content hash of everything that determines the trajectories; the
-    excluded execution knobs are parity-tested trajectory-neutral."""
-    semantic = {f.name: getattr(cfg, f.name) for f in fields(cfg)
-                if f.name not in NON_SEMANTIC_FIELDS}
+    excluded execution knobs are parity-tested trajectory-neutral, and
+    late-added semantic knobs at their ``HASH_ELIDED_DEFAULTS`` value are
+    dropped so pre-knob rows keep hashing identically."""
+    semantic = {}
+    for f in fields(cfg):
+        if f.name in NON_SEMANTIC_FIELDS:
+            continue
+        v = getattr(cfg, f.name)
+        if f.name in HASH_ELIDED_DEFAULTS and v == HASH_ELIDED_DEFAULTS[f.name]:
+            continue
+        semantic[f.name] = v
     payload = {"config": semantic, "seeds": [int(s) for s in seeds],
                "dataset": ds_sig}
     blob = json.dumps(jsonable(payload), sort_keys=True)
@@ -247,9 +271,11 @@ def run_campaign(spec: CampaignSpec, force: bool = False,
             if progress:
                 print(f"## campaign {spec.name}: running {'/'.join(key)} "
                       f"seeds={list(spec.seeds)}", flush=True)
+            # the sweep axis gets the RESOLVED algorithm name — any @variant
+            # suffix has already landed on cfg.overlap in scenario_config
             cell = sweep_lib.SweepSpec(
                 road_nets=(key[1],), distributions=(key[2],),
-                algorithms=(key[3],), seeds=spec.seeds, base=cfg)
+                algorithms=(cfg.algorithm,), seeds=spec.seeds, base=cfg)
             sr = sweep_lib.run_sweep(cell, dataset=ds, progress=progress)[0]
             row = scenario_row(key, cfg, spec.seeds, sr,
                                dataset_signature(ds), h)

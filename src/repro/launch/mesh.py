@@ -9,6 +9,14 @@ never touches jax device state.
 (pod?, vehicle, fsdp, model) for DFL training: the mesh "data" axis is
 factorized into vehicle-parallel and per-vehicle FSDP sub-axes
 (DESIGN.md §3 "Big-model federation").
+
+``initialize_multihost`` + ``make_multihost_federation_mesh`` extend the
+vehicle axis across processes (hosts): after ``jax.distributed`` is up,
+``jax.devices()`` is the *global* device list, so the same
+(vehicle, fsdp, model) reshape — and therefore the same PartitionSpecs and
+``shard_map`` programs (fed.backends, core.vehicle_axis) — span hosts with
+zero spec changes. Single-process calls fall back to the local mesh,
+spec-compatibly. See docs/SCALING.md "Overlap & multi-host".
 """
 from __future__ import annotations
 
@@ -57,6 +65,54 @@ def make_federation_mesh(*, multi_pod: bool = False, vehicle: int = 16,
         return Mesh(devices, ("pod", "vehicle", "fsdp", "model"))
     devices = devices.reshape(vehicle, fsdp, 16)
     return Mesh(devices, ("vehicle", "fsdp", "model"))
+
+
+def initialize_multihost(*, coordinator_address: str | None = None,
+                         num_processes: int = 1, process_id: int = 0,
+                         cpu_collectives: str = "gloo") -> int:
+    """Bring up the cross-process runtime for a vehicle mesh spanning hosts.
+
+    With ``num_processes > 1``: selects a CPU cross-process collectives
+    implementation when one is requested and available (XLA:CPU cannot run
+    multiprocess collectives without one; gloo ships with jaxlib), then
+    calls ``jax.distributed.initialize`` against the coordinator. After
+    this, ``jax.devices()`` enumerates every process's devices and
+    ``jax.process_count() == num_processes``.
+
+    With ``num_processes <= 1``: a pure no-op returning 1 — the
+    single-process fallback. Callers build the identical mesh/specs either
+    way, which is what makes the 2-process CI smoke test and a laptop run
+    the same code path.
+    """
+    if num_processes <= 1:
+        return 1
+    if cpu_collectives:
+        try:
+            jax.config.update("jax_cpu_collectives_implementation",
+                              cpu_collectives)
+        except (ValueError, AttributeError):
+            pass  # not a CPU run, or this jaxlib has no such implementation
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return jax.process_count()
+
+
+def make_multihost_federation_mesh(*, vehicle: int | None = None,
+                                   fsdp: int = 1, model: int = 1) -> Mesh:
+    """Federation mesh over the GLOBAL device list — every process's devices
+    after ``initialize_multihost`` (or just the local ones in the
+    single-process fallback). ``vehicle`` defaults to every device not
+    consumed by the fsdp/model axes; axis names match
+    ``make_federation_mesh``, so ``VehicleSharding`` row blocks, the
+    PartitionSpecs in fed.backends, and ``vehicle_axis.sharded_mix``'s
+    psum_scatter all carry over unchanged — the mesh is the contract.
+    """
+    devices = np.asarray(jax.devices())
+    if vehicle is None:
+        vehicle = devices.size // (fsdp * model)
+    return make_federation_mesh(vehicle=vehicle, fsdp=fsdp, model=model,
+                                devices=devices[:vehicle * fsdp * model])
 
 
 def vehicle_axes(mesh: Mesh) -> tuple[str, ...]:

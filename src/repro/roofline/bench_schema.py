@@ -1,13 +1,14 @@
 """Schema validation for the committed benchmark artifacts.
 
-BENCH_engine.json / BENCH_scale.json are machine-readable measurements the
-cost-model validation suite (tests/test_scenario_cost.py) replays pair by
-pair — a silently drifted key or unit there would turn the ranking
-assertions into no-ops. These lightweight validators pin the contract:
-required keys, types, and unit sanity ranges (rates positive, ratios
-positive, device/fleet counts >= 1). ``benchmarks/engine_backends.py`` and
-``benchmarks/engine_scale.py`` produce the files; tests/test_bench_schema.py
-holds both committed copies to this schema.
+BENCH_engine.json / BENCH_scale.json / BENCH_collective.json are
+machine-readable measurements the cost-model validation suite
+(tests/test_scenario_cost.py) replays pair by pair — a silently drifted key
+or unit there would turn the ranking assertions into no-ops. These
+lightweight validators pin the contract: required keys, types, and unit
+sanity ranges (rates positive, ratios positive, device/fleet counts >= 1).
+``benchmarks/engine_backends.py``, ``benchmarks/engine_scale.py`` and
+``benchmarks/collective_sweep.py`` produce the files;
+tests/test_bench_schema.py holds the committed copies to this schema.
 """
 from __future__ import annotations
 
@@ -25,6 +26,15 @@ ENGINE_ROW_SCHEMA: dict[str, tuple] = {
     "vmap_epochs_per_s": (_NUMBER, lambda v: v > 0),
     "shard_map_epochs_per_s": (_NUMBER, lambda v: v > 0),
     "shard_vs_vmap": (_NUMBER, lambda v: v > 0),
+}
+
+COLLECTIVE_ROW_SCHEMA: dict[str, tuple] = {
+    "collective": (str, lambda v: v in ("all_gather", "psum_scatter_per_leaf",
+                                        "psum_scatter_bucketed")),
+    "payload_mb": (_NUMBER, lambda v: v > 0),
+    "time_s": (_NUMBER, lambda v: v > 0),
+    "wire_mb": (_NUMBER, lambda v: v >= 0),
+    "gbytes_per_s": (_NUMBER, lambda v: v > 0),
 }
 
 SCALE_ROW_SCHEMA: dict[str, tuple] = {
@@ -111,6 +121,39 @@ def validate_scale_report(report: Any) -> dict:
     return report
 
 
+def validate_collective_report(report: Any) -> dict:
+    """Validate a BENCH_collective.json report (benchmarks/collective_sweep):
+    sized-collective rows plus the fitted ``derived`` block the cost model's
+    overlap-aware collective term is calibrated from
+    (scenario_cost.profile_from_collective_bench)."""
+    _check_report(report, "collective_sweep", COLLECTIVE_ROW_SCHEMA,
+                  extra_top=("device_count", "axis_size", "derived"))
+    for key in ("device_count", "axis_size"):
+        v = report[key]
+        if isinstance(v, bool) or not isinstance(v, int) or v < 1:
+            raise BenchSchemaError(f"collective_sweep: {key}={v!r}")
+    derived = report["derived"]
+    if not isinstance(derived, dict):
+        raise BenchSchemaError("collective_sweep: derived is not an object")
+    for key, ok in (("collective_launch_s", lambda v: v > 0),
+                    ("collective_bytes_per_s", lambda v: v > 0),
+                    ("overlap_fraction", lambda v: 0.0 <= v <= 1.0)):
+        if key not in derived:
+            raise BenchSchemaError(
+                f"collective_sweep.derived: missing {key!r}")
+        v = derived[key]
+        if isinstance(v, bool) or not isinstance(v, _NUMBER) or not ok(v):
+            raise BenchSchemaError(
+                f"collective_sweep.derived: {key}={v!r} out of range")
+    covered = {r["collective"] for r in report["results"]}
+    for name in ("psum_scatter_per_leaf", "psum_scatter_bucketed"):
+        if name not in covered:
+            raise BenchSchemaError(
+                f"collective_sweep: no {name!r} rows — the per-leaf vs "
+                f"bucketed comparison is the point of the sweep")
+    return report
+
+
 def load_engine_report(path: str) -> dict:
     with open(path) as f:
         return validate_engine_report(json.load(f))
@@ -119,3 +162,8 @@ def load_engine_report(path: str) -> dict:
 def load_scale_report(path: str) -> dict:
     with open(path) as f:
         return validate_scale_report(json.load(f))
+
+
+def load_collective_report(path: str) -> dict:
+    with open(path) as f:
+        return validate_collective_report(json.load(f))

@@ -63,6 +63,11 @@ class HostProfile:
     collective_bytes_per_s: float # psum_scatter payload bandwidth
     shard_parallel_fraction: float
     pallas_mix_gain: float = 1.0  # sparse-mix bandwidth gain from the kernel
+    # fraction of the psum_scatter wire time hidden behind the co-issued
+    # partial matmuls (the pipelined bucketed mix): 0 = fully synchronous,
+    # toward 1 with async collectives. Measured by
+    # benchmarks/collective_sweep.py (profile_from_collective_bench).
+    overlap_fraction: float = 0.0
 
     def shard_speedup(self, num_shards: int) -> float:
         f = self.shard_parallel_fraction
@@ -79,9 +84,10 @@ CI_HOST = HostProfile(
     gemm_dispatch_s=45e-6,        # fitted: dense P1 penalty at K=8
     stream_bytes_per_s=25.6e9,
     epoch_overhead_s=2e-4,
-    collective_launch_s=4.3e-3,   # fitted: shard_map per-epoch overhead / 12
-    collective_bytes_per_s=25.6e9,
+    collective_launch_s=3.4e-3,   # fitted: bucketed shard_map overhead / 5
+    collective_bytes_per_s=0.2e9,   # measured: BENCH_collective.json derived
     shard_parallel_fraction=0.174,  # fitted: speedup(4) = 1.15 on one socket
+    overlap_fraction=0.57,          # measured: BENCH_collective.json derived
 )
 
 # Untested-magnitude TPU v5e profile from roofline/hw.py peaks; rankings only.
@@ -97,6 +103,7 @@ TPU_V5E = HostProfile(
     collective_bytes_per_s=50e9,   # ICI link
     shard_parallel_fraction=0.97,
     pallas_mix_gain=1.5,
+    overlap_fraction=0.9,          # async ICI collectives behind MXU compute
 )
 
 
@@ -104,6 +111,24 @@ def default_host_profile() -> HostProfile:
     import jax
 
     return TPU_V5E if jax.default_backend() == "tpu" else CI_HOST
+
+
+def profile_from_collective_bench(report: dict,
+                                  base: HostProfile | None = None) -> HostProfile:
+    """Fold a measured BENCH_collective.json ``derived`` block into a host
+    profile: link bandwidth and overlap fraction come straight from the
+    sweep; the per-collective launch keeps the engine-fitted constant (the
+    shard_map scan step pays rendezvous + program overhead the bare-
+    collective microbenchmark does not see) unless the sweep measured a
+    *larger* one."""
+    d = report["derived"]
+    base = base or CI_HOST
+    return replace(
+        base,
+        collective_launch_s=max(base.collective_launch_s,
+                                float(d["collective_launch_s"])),
+        collective_bytes_per_s=float(d["collective_bytes_per_s"]),
+        overlap_fraction=float(d["overlap_fraction"]))
 
 
 # ------------------------------------------------- measured local-train cost
@@ -269,11 +294,18 @@ def predict_scenario(cfg, *, d_max: int, device_count: int = 1,
             if k in terms:
                 terms[k] /= speedup
         if shards > 1:
-            n_coll = stats["leaves"] + 4  # mix psum_scatter leaves + pmeans
-            terms["collective"] = (
-                n_coll * host.collective_launch_s
-                + vehicle_axis.psum_scatter_bytes(K, 4 * stats["params"], shards)
-                / host.collective_bytes_per_s)
+            # mix scatters (per-leaf, or the bucketed packing) + the pmeans
+            bucket_mb = getattr(cfg, "comm_bucket_mb", 0.0)
+            n_mix = vehicle_axis.num_comm_buckets(
+                4.0 * K * stats["params"], bucket_mb, stats["leaves"])
+            wire_s = (vehicle_axis.psum_scatter_bytes(
+                K, 4 * stats["params"], shards) / host.collective_bytes_per_s)
+            # bucketed payloads pipeline against the partial matmuls, hiding
+            # the measured overlap fraction of the wire time; the per-leaf
+            # path (bucketing off) overlaps nothing
+            hidden = host.overlap_fraction if bucket_mb > 0 else 0.0
+            terms["collective"] = ((n_mix + 4) * host.collective_launch_s
+                                   + wire_s * (1.0 - hidden))
 
     return CostBreakdown(
         backend=cfg.backend, contact_format=cfg.contact_format,

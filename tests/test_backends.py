@@ -302,6 +302,79 @@ print("SHARD_PARITY_OK")
 
 
 # ---------------------------------------------------------------------------
+# bucketed collectives (comm_bucket_mb) and delayed gossip (overlap="delayed")
+
+
+def test_comm_bucketing_is_semantics_preserving(tiny_ds):
+    """The bucketed exchange regroups the sharded mix's psum_scatters —
+    off (per-leaf), default (4 MB), and tiny (per-leaf-sized buckets) must
+    all reproduce the vmap trajectories."""
+    cfg = _tiny_cfg(epochs=3, eval_every=3)
+    vmap_res = run_simulation(cfg, dataset=tiny_ds)
+    for bucket_mb in (0.0, 4.0, 0.001):
+        shard = run_simulation(
+            replace(cfg, backend="shard_map", comm_bucket_mb=bucket_mb),
+            dataset=tiny_ds)
+        np.testing.assert_allclose(shard.avg_accuracy, vmap_res.avg_accuracy,
+                                   atol=1e-5)
+        np.testing.assert_allclose(shard.vehicle_accuracy,
+                                   vmap_res.vehicle_accuracy, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["vmap", "shard_map"])
+@pytest.mark.parametrize("algorithm", algorithms.available_algorithms())
+def test_delayed_gossip_degenerate_parity_is_exact(tiny_ds, algorithm,
+                                                   backend):
+    """With no live contacts (p_drop=1.0 -> W = I) the delayed mode's
+    neighbour term is exactly zero and its self weight exactly one, so the
+    trajectory must be BITWISE identical to synchronous gossip — every
+    algorithm, both backends."""
+    cfg = _tiny_cfg(algorithm=algorithm, backend=backend, p_drop=1.0,
+                    epochs=3, eval_every=3)
+    sync = run_simulation(cfg, dataset=tiny_ds)
+    delayed = run_simulation(replace(cfg, overlap="delayed"), dataset=tiny_ds)
+    np.testing.assert_array_equal(delayed.avg_accuracy, sync.avg_accuracy)
+    np.testing.assert_array_equal(delayed.vehicle_accuracy,
+                                  sync.vehicle_accuracy)
+
+
+def test_delayed_gossip_learns_and_differs_from_sync(tiny_ds):
+    """With live contacts the one-round-stale neighbour payloads change the
+    trajectory (it would be a no-op bug if they didn't) but training still
+    converges to a finite model."""
+    cfg = _tiny_cfg(epochs=4, eval_every=2)
+    sync = run_simulation(cfg, dataset=tiny_ds)
+    delayed = run_simulation(replace(cfg, overlap="delayed"), dataset=tiny_ds)
+    assert np.isfinite(delayed.final_accuracy())
+    assert not np.array_equal(delayed.avg_accuracy, sync.avg_accuracy)
+
+
+def test_delayed_gossip_shard_map_matches_vmap(tiny_ds):
+    """The double-buffered carry shards like the model stack: delayed
+    trajectories agree across backends with live contacts."""
+    cfg = _tiny_cfg(epochs=4, eval_every=2, overlap="delayed")
+    vmap_res = run_simulation(cfg, dataset=tiny_ds)
+    shard_res = run_simulation(replace(cfg, backend="shard_map"),
+                               dataset=tiny_ds)
+    assert shard_res.epochs_evaluated == vmap_res.epochs_evaluated
+    np.testing.assert_allclose(shard_res.avg_accuracy, vmap_res.avg_accuracy,
+                               atol=1e-5)
+    np.testing.assert_allclose(shard_res.vehicle_accuracy,
+                               vmap_res.vehicle_accuracy, atol=1e-5)
+
+
+def test_delayed_gossip_requires_scan_engine(tiny_ds):
+    cfg = _tiny_cfg(overlap="delayed", use_scan_engine=False)
+    with pytest.raises(ValueError, match="scan engine"):
+        run_simulation(cfg, dataset=tiny_ds)
+
+
+def test_unknown_overlap_mode_rejected(tiny_ds):
+    with pytest.raises(ValueError, match="delayed"):
+        engine.build_context(_tiny_cfg(overlap="nope"), dataset=tiny_ds)
+
+
+# ---------------------------------------------------------------------------
 # sweep integration: new names by registry, scenario-level wall time
 
 

@@ -8,8 +8,9 @@ from pathlib import Path
 import pytest
 
 from repro.roofline.bench_schema import (
-    BenchSchemaError, load_engine_report, load_scale_report,
-    validate_engine_report, validate_scale_report)
+    BenchSchemaError, load_collective_report, load_engine_report,
+    load_scale_report, validate_collective_report, validate_engine_report,
+    validate_scale_report)
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
@@ -22,6 +23,11 @@ def engine_report():
 @pytest.fixture(scope="module")
 def scale_report():
     return load_scale_report(str(REPO_ROOT / "BENCH_scale.json"))
+
+
+@pytest.fixture(scope="module")
+def collective_report():
+    return load_collective_report(str(REPO_ROOT / "BENCH_collective.json"))
 
 
 def test_committed_engine_report_valid(engine_report):
@@ -98,6 +104,71 @@ def test_scale_unknown_format_rejected(scale_report):
         validate_scale_report(bad)
 
 
+def test_committed_collective_report_valid(collective_report):
+    assert collective_report["benchmark"] == "collective_sweep"
+    assert collective_report["device_count"] >= 1
+    assert collective_report["axis_size"] >= 1
+    names = {r["collective"] for r in collective_report["results"]}
+    assert {"psum_scatter_per_leaf", "psum_scatter_bucketed"} <= names
+    d = collective_report["derived"]
+    assert d["collective_launch_s"] > 0
+    assert d["collective_bytes_per_s"] > 0
+    assert 0.0 <= d["overlap_fraction"] <= 1.0
+
+
+def test_collective_missing_derived_key_rejected(collective_report):
+    bad = copy.deepcopy(collective_report)
+    del bad["derived"]["overlap_fraction"]
+    with pytest.raises(BenchSchemaError, match="overlap_fraction"):
+        validate_collective_report(bad)
+
+
+def test_collective_overlap_out_of_range_rejected(collective_report):
+    bad = copy.deepcopy(collective_report)
+    bad["derived"]["overlap_fraction"] = 1.5
+    with pytest.raises(BenchSchemaError, match="overlap_fraction"):
+        validate_collective_report(bad)
+
+
+def test_collective_unknown_name_rejected(collective_report):
+    bad = copy.deepcopy(collective_report)
+    bad["results"][0]["collective"] = "all_to_all"
+    with pytest.raises(BenchSchemaError, match="collective"):
+        validate_collective_report(bad)
+
+
+def test_collective_missing_bucketed_rows_rejected(collective_report):
+    bad = copy.deepcopy(collective_report)
+    bad["results"] = [r for r in bad["results"]
+                      if r["collective"] != "psum_scatter_bucketed"]
+    with pytest.raises(BenchSchemaError, match="psum_scatter_bucketed"):
+        validate_collective_report(bad)
+
+
+def test_collective_bool_derived_rejected(collective_report):
+    bad = copy.deepcopy(collective_report)
+    bad["derived"]["overlap_fraction"] = True
+    with pytest.raises(BenchSchemaError, match="overlap_fraction"):
+        validate_collective_report(bad)
+
+
+def test_collective_nonpositive_rate_rejected(collective_report):
+    bad = copy.deepcopy(collective_report)
+    bad["results"][0]["gbytes_per_s"] = 0.0
+    with pytest.raises(BenchSchemaError, match="out of range"):
+        validate_collective_report(bad)
+
+
+def test_collective_feeds_the_cost_model_profile(collective_report):
+    from repro.roofline import scenario_cost
+
+    prof = scenario_cost.profile_from_collective_bench(collective_report)
+    d = collective_report["derived"]
+    assert prof.collective_bytes_per_s == d["collective_bytes_per_s"]
+    assert prof.overlap_fraction == d["overlap_fraction"]
+    assert prof.collective_launch_s >= d["collective_launch_s"]
+
+
 def test_empty_results_rejected(engine_report):
     bad = copy.deepcopy(engine_report)
     bad["results"] = []
@@ -113,6 +184,8 @@ def test_bool_is_not_an_int(engine_report):
         validate_engine_report(bad)
 
 
-def test_reports_are_plain_json(engine_report, scale_report):
+def test_reports_are_plain_json(engine_report, scale_report,
+                                collective_report):
     json.dumps(engine_report)
     json.dumps(scale_report)
+    json.dumps(collective_report)

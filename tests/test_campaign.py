@@ -122,6 +122,35 @@ def test_scenario_row_records_auto_resolution(tiny_ds):
     assert json.dumps(row)
 
 
+def test_spec_hash_elides_default_overlap(tiny_ds):
+    """The overlap knob landed after store rows were committed: at its
+    "sync" default it must be dropped from the hash payload (pre-knob rows
+    keep cache-hitting), while "delayed" is a real semantic change. The
+    bucket size is an execution knob — hash-neutral at any value."""
+    sig = campaign_lib.dataset_signature(tiny_ds)
+    cfg = _base()
+    h = campaign_lib.spec_hash(cfg, (0, 1), sig)
+    assert campaign_lib.spec_hash(replace(cfg, overlap="sync"), (0, 1),
+                                  sig) == h
+    assert campaign_lib.spec_hash(replace(cfg, comm_bucket_mb=0.0), (0, 1),
+                                  sig) == h
+    assert campaign_lib.spec_hash(replace(cfg, overlap="delayed"), (0, 1),
+                                  sig) != h
+    # the elision list and the config agree on what "default" means
+    assert SimulationConfig().overlap == \
+        campaign_lib.HASH_ELIDED_DEFAULTS["overlap"]
+
+
+def test_scenario_config_parses_overlap_variant():
+    base = _base()
+    key = ("mnist", "grid", "balanced_noniid", "dds@delayed")
+    cfg = campaign_lib.scenario_config(base, key)
+    assert cfg.algorithm == "dds" and cfg.overlap == "delayed"
+    plain = campaign_lib.scenario_config(
+        base, ("mnist", "grid", "balanced_noniid", "dds"))
+    assert plain.algorithm == "dds" and plain.overlap == "sync"
+
+
 def test_spec_hash_tracks_semantic_changes(tiny_ds):
     sig = campaign_lib.dataset_signature(tiny_ds)
     cfg = _base()

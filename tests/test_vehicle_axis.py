@@ -1,0 +1,227 @@
+"""Vehicle-axis collective helpers: bucketed-exchange packing/accounting
+(``comm_buckets`` / ``num_comm_buckets`` / ``psum_scatter_bytes``), the
+delayed-gossip decomposition (``mixing_self_weight`` / ``zero_self_weight``
+/ ``delayed_gossip_mix``), and ``backends.vehicle_shards`` edge cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, contacts as contacts_lib, vehicle_axis
+from repro.core.vehicle_axis import (
+    GLOBAL, comm_buckets, delayed_gossip_mix, mixing_self_weight,
+    num_comm_buckets, psum_scatter_bytes, zero_self_weight)
+from repro.fed import backends
+
+K = 8
+
+
+def _leaves(shapes, dtypes=None):
+    dtypes = dtypes or [jnp.float32] * len(shapes)
+    return [jnp.ones(s, d) for s, d in zip(shapes, dtypes)]
+
+
+# ---------------------------------------------------------------------------
+# comm_buckets: the packing is a pure regrouping
+
+
+def test_comm_buckets_partition_is_exact_and_ordered():
+    leaves = _leaves([(K, 10), (K, 3), (K, 7, 2), (K,)])
+    buckets = comm_buckets(leaves, bucket_bytes=4 * K * 12)
+    flat = [i for b in buckets for i in b]
+    assert flat == list(range(len(leaves)))  # every leaf once, in order
+    assert all(b for b in buckets)
+
+
+def test_comm_buckets_one_bucket_when_budget_is_large():
+    leaves = _leaves([(K, 4)] * 5)
+    assert comm_buckets(leaves, bucket_bytes=1e9) == [[0, 1, 2, 3, 4]]
+
+
+def test_comm_buckets_per_leaf_when_budget_is_tiny():
+    leaves = _leaves([(K, 4)] * 3)
+    assert comm_buckets(leaves, bucket_bytes=1.0) == [[0], [1], [2]]
+
+
+def test_comm_buckets_never_split_an_oversized_leaf():
+    leaves = _leaves([(K, 2), (K, 1000), (K, 2)])
+    budget = 4 * K * 8  # holds both small leaves, not the big one
+    assert comm_buckets(leaves, budget) == [[0], [1], [2]]
+
+
+def test_comm_buckets_split_on_dtype_change():
+    leaves = _leaves([(K, 2), (K, 2), (K, 2)],
+                     [jnp.float32, jnp.float32, jnp.bfloat16])
+    assert comm_buckets(leaves, bucket_bytes=1e9) == [[0, 1], [2]]
+
+
+# ---------------------------------------------------------------------------
+# num_comm_buckets: the cost model's closed form matches the packing regime
+
+
+def test_num_comm_buckets_closed_form():
+    mb = 2**20
+    assert num_comm_buckets(10 * mb, bucket_mb=4.0, num_leaves=8) == 3
+    assert num_comm_buckets(0.5 * mb, bucket_mb=4.0, num_leaves=8) == 1
+    # can never launch more collectives than there are leaves
+    assert num_comm_buckets(100 * mb, bucket_mb=0.001, num_leaves=3) == 3
+    # bucketing off -> per-leaf launches
+    assert num_comm_buckets(10 * mb, bucket_mb=0.0, num_leaves=8) == 8
+    assert num_comm_buckets(10 * mb, bucket_mb=-1.0, num_leaves=5) == 5
+
+
+def test_num_comm_buckets_matches_actual_packing():
+    leaves = _leaves([(K, 256)] * 6)  # 8 KiB each, 48 KiB total
+    payload = sum(x.size * x.dtype.itemsize for x in leaves)
+    leaf_mb = 8192 / 2**20
+    # budgets that are exact leaf multiples: greedy whole-leaf packing is
+    # perfect, so the closed form matches the real bucket count
+    for mult in (1, 2, 3, 6):
+        assert num_comm_buckets(payload, mult * leaf_mb, len(leaves)) == \
+            len(comm_buckets(leaves, mult * leaf_mb * 2**20))
+    # otherwise it's the perfect-packing lower bound (greedy never splits a
+    # leaf, so it can only use MORE launches), still capped by the leaf count
+    for bucket_mb in (0.01, 0.02, 0.05):
+        actual = len(comm_buckets(leaves, bucket_mb * 2**20))
+        assert num_comm_buckets(payload, bucket_mb, len(leaves)) <= actual
+        assert actual <= len(leaves)
+
+
+# ---------------------------------------------------------------------------
+# psum_scatter_bytes: bucketing moves exactly the same wire volume
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_bucketed_wire_bytes_sum_to_closed_form(num_shards):
+    """Summing the per-bucket scatter volumes reproduces the single
+    closed-form total: bucketing regroups launches, never bytes."""
+    leaves = _leaves([(K, 10), (K, 3), (K, 7, 2), (K,)])
+    row_bytes = [x.size // K * x.dtype.itemsize for x in leaves]
+    for bucket_bytes in (1.0, 4 * K * 12, 1e9):
+        per_bucket = [
+            psum_scatter_bytes(K, sum(row_bytes[i] for i in b), num_shards)
+            for b in comm_buckets(leaves, bucket_bytes)]
+        assert sum(per_bucket) == pytest.approx(
+            psum_scatter_bytes(K, sum(row_bytes), num_shards))
+
+
+def test_psum_scatter_bytes_single_shard_is_free():
+    assert psum_scatter_bytes(K, 4096, 1) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# delayed-gossip decomposition
+
+
+def _dense_w(k=K, seed=0):
+    w = np.random.default_rng(seed).random((k, k)).astype(np.float32)
+    return jnp.asarray(w / w.sum(axis=1, keepdims=True))
+
+
+def _sparse_mixing(k=K, d=4, seed=1):
+    """Neighbour-list mixing with the repo's padding convention: padding
+    slots carry the row's own id with weight 0; slot 0 is the real self."""
+    rng = np.random.default_rng(seed)
+    idx = np.tile(np.arange(k, dtype=np.int32)[:, None], (1, d))
+    w = np.zeros((k, d), np.float32)
+    for r in range(k):
+        nbrs = rng.choice([j for j in range(k) if j != r], size=2,
+                          replace=False)
+        idx[r, 1:3] = nbrs
+        w[r, :3] = rng.random(3).astype(np.float32)
+        w[r] /= w[r].sum()
+    return contacts_lib.SparseMixing(jnp.asarray(idx), jnp.asarray(w))
+
+
+def _densify(sm, k=K):
+    dense = np.zeros((k, k), np.float32)
+    idx, w = np.asarray(sm.idx), np.asarray(sm.w)
+    for r in range(k):
+        for s in range(idx.shape[1]):
+            dense[r, idx[r, s]] += w[r, s]
+    return dense
+
+
+def test_self_weight_and_zeroing_dense():
+    w = _dense_w()
+    np.testing.assert_array_equal(mixing_self_weight(w), jnp.diagonal(w))
+    z = zero_self_weight(w)
+    np.testing.assert_array_equal(jnp.diagonal(z), jnp.zeros(K))
+    off = w * (1.0 - jnp.eye(K))
+    np.testing.assert_array_equal(z, off)
+
+
+def test_self_weight_and_zeroing_sparse_match_densified():
+    sm = _sparse_mixing()
+    dense = _densify(sm)
+    np.testing.assert_allclose(mixing_self_weight(sm), np.diagonal(dense),
+                               rtol=1e-6)
+    np.testing.assert_allclose(_densify(zero_self_weight(sm)),
+                               dense * (1.0 - np.eye(K)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("make_mixing", [_dense_w, _sparse_mixing])
+def test_delayed_mix_with_fresh_buffer_equals_sync(make_mixing):
+    """With stale == current the decomposition W@x = (W - diag)@x + diag*x
+    must reproduce the synchronous mix."""
+    mixing = make_mixing()
+    params = {"a": jnp.asarray(np.random.default_rng(3).random((K, 5)),
+                               jnp.float32),
+              "b": jnp.asarray(np.random.default_rng(4).random((K, 2, 3)),
+                               jnp.float32)}
+    delayed = delayed_gossip_mix(aggregation.mix_params, GLOBAL)
+    out = delayed(mixing, params, params)
+    ref = aggregation.mix_params(mixing, params)
+    for k in params:
+        np.testing.assert_allclose(out[k], ref[k], atol=1e-6)
+
+
+def test_delayed_mix_identity_w_is_bitwise_exact():
+    """The degenerate anchor: with W = I the neighbour term is exactly zero
+    and the self weight exactly one, whatever garbage sits in the stale
+    buffer — this is what makes the engine's p_drop=1.0 parity test exact."""
+    params = {"a": jnp.asarray(np.random.default_rng(5).random((K, 7)),
+                               jnp.float32)}
+    stale = {"a": jnp.full((K, 7), 1e9, jnp.float32)}
+    delayed = delayed_gossip_mix(aggregation.mix_params, GLOBAL)
+    out = delayed(jnp.eye(K, dtype=jnp.float32), params, stale)
+    np.testing.assert_array_equal(out["a"], params["a"])
+
+
+# ---------------------------------------------------------------------------
+# backends.vehicle_shards edge cases (S3)
+
+
+def _patched_devices(monkeypatch, n):
+    monkeypatch.setattr(backends.jax, "device_count", lambda: n)
+
+
+def test_vehicle_shards_prime_fleet_falls_back_to_one(monkeypatch):
+    _patched_devices(monkeypatch, 4)
+    assert backends.vehicle_shards(7) == 1   # prime K > device count
+    assert backends.vehicle_shards(13) == 1
+
+
+def test_vehicle_shards_max_shards_caps_below_device_count(monkeypatch):
+    _patched_devices(monkeypatch, 8)
+    assert backends.vehicle_shards(12, max_shards=3) == 3
+    assert backends.vehicle_shards(12, max_shards=5) == 4  # largest divisor
+    # max_shards above the device count never exceeds the hardware
+    assert backends.vehicle_shards(16, max_shards=64) == 8
+
+
+def test_vehicle_shards_small_fleet_on_many_devices(monkeypatch):
+    _patched_devices(monkeypatch, 8)
+    assert backends.vehicle_shards(2) == 2   # K < device count
+    assert backends.vehicle_shards(1) == 1
+
+
+def test_vehicle_shards_takes_all_devices_when_divisible(monkeypatch):
+    _patched_devices(monkeypatch, 4)
+    assert backends.vehicle_shards(8) == 4
+    assert backends.vehicle_shards(6) == 3   # 4 doesn't divide 6
+
+
+def test_vehicle_shards_real_device_count_sanity():
+    n = backends.vehicle_shards(8)
+    assert 1 <= n <= min(8, jax.device_count()) and 8 % n == 0
